@@ -1,0 +1,85 @@
+"""§V-C reproduction: heterogeneous-distributed vs single-node accuracy parity.
+
+Paper: 416k images, 1 node vs 6 nodes; loss 1.1859 -> 1.1907 (+0.5%), same
+accuracy (0.31).  The claim under test: *heterogeneous distribution with
+tuned unequal batch sizes does not degrade training quality* when the LR
+follows the Goyal linear-scaling + warmup rule.
+
+Our version, on a real LM (reduced deepseek-7b): train the SAME total token
+budget (a) single-group, (b) 3 heterogeneous groups (tuned 8/2/2 split via
+the masked-union batch).  The theory (tests/test_hetero.py) says the GRADIENTS
+are identical when the union batch matches; here the union batches differ per
+step (different data order) so we verify the final-loss gap stays < 2%.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import smoke_config
+from repro.core.hetero import BatchSchedule
+from repro.data.pipeline import DataConfig, synth_sequence
+from repro.models.api import get_model
+from repro.optim import sgd_momentum
+from repro.optim.schedules import goyal_schedule
+from repro.train.steps import make_train_step
+
+import numpy as np
+
+SEQ = 32
+STEPS = 60
+VALID_PER_STEP = 12     # union batch size in both setups
+
+
+def _make_batch(dcfg, sched: BatchSchedule, step: int):
+    """Group-major masked batch; all groups read one shared stream."""
+    R, S = sched.global_rows, dcfg.seq_len
+    toks = np.zeros((R, S + 1), np.int32)
+    mask = sched.row_mask()
+    ml = sched.max_local
+    i = 0
+    for g, b in enumerate(sched.group_batches):
+        for r in range(b):
+            toks[g * ml + r] = synth_sequence(dcfg, "shared", step * VALID_PER_STEP + i)
+            i += 1
+    return {
+        "tokens": jnp.asarray(toks[:, :-1]),
+        "labels": jnp.asarray(toks[:, 1:]),
+        "loss_mask": jnp.asarray(mask[:, None] * np.ones((1, S), np.float32)),
+    }
+
+
+def _train(sched: BatchSchedule, seed: int = 0) -> float:
+    cfg = smoke_config("deepseek-7b")
+    model = get_model(cfg)
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=SEQ, seed=7)
+    params, _ = model.init_params(key=jax.random.PRNGKey(seed))
+    opt = sgd_momentum(momentum=0.9)
+    lr = goyal_schedule(3e-2, sched.valid_rows, base_batch=VALID_PER_STEP,
+                        warmup_steps=10, total_steps=STEPS)
+    step_fn = jax.jit(make_train_step(model, opt, lr))
+    state = opt.init(params)
+    losses = []
+    for i in range(STEPS):
+        batch = _make_batch(dcfg, sched, i)
+        params, state, m = step_fn(params, state, batch)
+        losses.append(float(m["loss"]))
+    return float(np.mean(losses[-10:]))
+
+
+def run(verbose: bool = True) -> Dict[str, float]:
+    single = _train(BatchSchedule((VALID_PER_STEP,)))
+    hetero = _train(BatchSchedule((8, 2, 2)))
+    gap = abs(hetero - single) / single
+    if verbose:
+        print("\n== §V-C: accuracy parity (single vs heterogeneous) ==")
+        print(f"single-group final loss : {single:.4f}")
+        print(f"hetero (8/2/2) final    : {hetero:.4f}")
+        print(f"relative gap            : {gap:.2%} (paper: 0.5%; gate: <2%)")
+    return {"single": single, "hetero": hetero, "gap": gap, "ok": gap < 0.02}
+
+
+if __name__ == "__main__":
+    print(run())

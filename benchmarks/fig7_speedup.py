@@ -1,0 +1,53 @@
+"""Fig. 7 reproduction: relative speedup vs number of CSDs.
+
+Paper findings to validate:
+  * up to ~2.7x speedup at 24 CSDs (MobileNetV2);
+  * smaller networks speed up more (sync cost grows with param count);
+  * SqueezeNet (2.46M flops but 15x the MACs) gains less than MobileNetV2.
+
+Speedup(n) = throughput(host + n CSDs) / throughput(host alone), identical to
+the paper's metric.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.fig6_throughput import CSD_COUNTS, NETS, run as fig6_run
+
+
+def run(verbose: bool = True) -> Dict[str, List[float]]:
+    curves = fig6_run(verbose=False)
+    speedups = {
+        net: [p / pts[0] if pts[0] > 0 else 0.0 for p in pts]
+        for net, pts in curves.items()
+        for pts in [curves[net]]
+    }
+    if verbose:
+        print("\n== Fig. 7: relative speedup vs #CSDs ==")
+        print(f"{'#CSD':>5s} " + " ".join(f"{n:>12s}" for n in NETS))
+        for i, n in enumerate(CSD_COUNTS):
+            print(f"{n:>5d} " + " ".join(f"{speedups[k][i]:>12.2f}" for k in NETS))
+        m24 = speedups["mobilenetv2"][-1]
+        print(f"\nMobileNetV2 speedup at 24 CSDs: {m24:.2f}x (paper: ~2.7x)")
+    return speedups
+
+
+def validate() -> Dict[str, bool]:
+    s = run(verbose=False)
+    final = {net: pts[-1] for net, pts in s.items()}
+    return {
+        # paper claim 1: >= 2x speedup for MobileNetV2-class nets at 24 CSDs
+        "mobilenet_speedup_2x": final["mobilenetv2"] >= 2.0,
+        # paper claim 2: monotone non-decreasing speedup with CSD count
+        "monotone": all(
+            all(b >= a - 1e-6 for a, b in zip(pts, pts[1:]))
+            for pts in s.values()
+        ),
+        # paper claim 3: adding CSDs never hurts vs host-alone
+        "never_below_1": all(v >= 1.0 for v in final.values()),
+    }
+
+
+if __name__ == "__main__":
+    run()
+    print(validate())

@@ -1,0 +1,43 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run table1     # one
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    argv = argv if argv is not None else sys.argv[1:]
+    from benchmarks import (
+        accuracy_parity, fig6_throughput, fig7_speedup, table1_tuning,
+        table2_energy,
+    )
+
+    suites = {
+        "table1": lambda: table1_tuning.run(),
+        "fig6": lambda: fig6_throughput.run(),
+        "fig7": lambda: (fig7_speedup.run(), print(fig7_speedup.validate())),
+        "table2": lambda: (table2_energy.run(), print(table2_energy.validate())),
+        "accuracy": lambda: print(accuracy_parity.run()),
+    }
+    wanted = argv or list(suites)
+    rc = 0
+    for name in wanted:
+        if name not in suites:
+            print(f"unknown suite {name!r}; have {list(suites)}")
+            return 2
+        t0 = time.time()
+        try:
+            suites[name]()
+            print(f"[{name}] done in {time.time()-t0:.1f}s")
+        except Exception as e:
+            rc = 1
+            print(f"[{name}] FAILED: {type(e).__name__}: {e}")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

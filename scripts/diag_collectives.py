@@ -1,0 +1,56 @@
+"""Diagnostic: top collective ops in one cell's compiled HLO (1-cycle unrolled).
+
+  PYTHONPATH=src python scripts/diag_collectives.py qwen3-moe-30b-a3b train_4k
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import re
+import sys
+
+from repro.configs import get_config
+from repro.configs.shapes import SHAPES
+from repro.distributed.sharding import make_rules, set_rules
+from repro.launch.dryrun import _lower_and_compile, _with_layers, _cycle_len
+from repro.launch.mesh import make_production_mesh
+from repro.roofline.collectives import _LINE_RE, _shape_bytes, _group_size
+
+
+def main():
+    arch, shape_name = sys.argv[1], sys.argv[2]
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh()
+    rules = make_rules(fsdp=cfg.fsdp)
+    rules.setdefault("seq_data", None)
+    set_rules(rules)
+    c = _cycle_len(cfg)
+    compiled = _lower_and_compile(_with_layers(cfg, c), shape, mesh, rules)
+    ops = []
+    for line in compiled.as_text().splitlines():
+        m = _LINE_RE.search(line)
+        if not m or m.group(4) == "-done":
+            continue
+        kind = m.group(3)
+        rb = _shape_bytes(m.group(1) or m.group(2))
+        n = _group_size(line)
+        wire = {"all-reduce": 2 * rb * (n - 1) / n,
+                "all-gather": rb * (n - 1) / n,
+                "reduce-scatter": rb * (n - 1),
+                "all-to-all": rb * (n - 1) / n,
+                "collective-permute": rb}[kind]
+        meta = ""
+        mm = re.search(r'metadata=\{op_name="([^"]*)"', line)
+        if mm:
+            meta = mm.group(1)[-110:]
+        ops.append((wire, kind, rb, n, meta))
+    ops.sort(reverse=True)
+    total = sum(o[0] for o in ops)
+    print(f"{arch} x {shape_name}: {len(ops)} collectives, {total:.3e} wire B/dev (1 cycle)")
+    for wire, kind, rb, n, meta in ops[:25]:
+        print(f"  {wire:.2e} {kind:18s} n={n:<3d} result={rb:.2e}  {meta}")
+
+
+if __name__ == "__main__":
+    main()

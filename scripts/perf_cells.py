@@ -1,0 +1,105 @@
+"""Reproduce the §Perf hillclimbed cells (EXPERIMENTS.md) — baseline vs
+optimized records for the three chosen (arch x shape) pairs.
+
+  PYTHONPATH=src python scripts/perf_cells.py [--out results_perf.json]
+
+The baseline rows force the dense MoE dispatch (REPRO_MOE_IMPL=dense is set
+by the runner below for those rows); optimized rows use the shard_map EP
+path + the per-cell winning rule overrides from the perf log.
+"""
+import argparse
+import json
+import subprocess
+import sys
+import os
+
+CELLS = {
+    "qwen3-moe-30b-a3b": {
+        "shape": "train_4k",
+        "overrides": {
+            "batch": ["pod", "data", "model"],
+            "heads": None, "kv_heads": None,
+            "act_heads": None, "act_kv_heads": None, "act_mlp": None,
+        },
+        "zero1": True,
+        "remat": False,
+    },
+    "deepseek-7b": {
+        "shape": "train_4k",
+        "overrides": {
+            "batch": ["pod", "data", "model"],
+            "heads": None, "kv_heads": None,
+            "act_heads": None, "act_kv_heads": None,
+        },
+        "zero1": True,
+        "remat": False,
+    },
+    "dbrx-132b": {
+        "shape": "train_4k",
+        "overrides": {
+            "batch": ["pod", "data", "model"],
+            "heads": None, "kv_heads": None,
+            "act_heads": None, "act_kv_heads": None, "act_mlp": None,
+        },
+        "zero1": False,   # 132B: params alone exceed HBM under ZeRO-1
+        "remat": True,
+    },
+}
+
+RUNNER = r"""
+import json, sys
+spec = json.loads(sys.argv[1])
+import repro.configs as C
+orig = C.get_config
+if not spec["remat"]:
+    C.get_config = lambda n: orig(n).with_(remat=False) if n == spec["arch"] else orig(n)
+import repro.launch.dryrun as D
+D.get_config = C.get_config
+over = {k: (tuple(v) if isinstance(v, list) else v)
+        for k, v in spec["overrides"].items()} if spec["overrides"] else None
+rec = D.dryrun_cell(spec["arch"], spec["shape"], zero1=spec["zero1"],
+                    rules_overrides=over, verbose=False)
+print("RESULT " + json.dumps(rec))
+"""
+
+
+def run_cell(arch, spec, mode):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env["REPRO_MOE_IMPL"] = "dense" if mode == "baseline" else "auto"
+    payload = {
+        "arch": arch, "shape": spec["shape"],
+        "overrides": None if mode == "baseline" else spec["overrides"],
+        "zero1": False if mode == "baseline" else spec["zero1"],
+        "remat": True if mode == "baseline" else spec["remat"],
+    }
+    out = subprocess.run(
+        [sys.executable, "-c", RUNNER, json.dumps(payload)],
+        capture_output=True, text=True, env=env, timeout=1200,
+    )
+    for line in out.stdout.splitlines():
+        if line.startswith("RESULT "):
+            return json.loads(line[len("RESULT "):])
+    raise RuntimeError(out.stderr[-2000:])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results_perf.json")
+    args = ap.parse_args()
+    rows = []
+    for arch, spec in CELLS.items():
+        for mode in ("baseline", "optimized"):
+            rec = run_cell(arch, spec, mode)
+            rec["mode"] = mode
+            coll = sum(rec["collective_bytes"].values())
+            print(f"{arch} [{mode:9s}]: flops {rec['flops']:.3e} "
+                  f"hbm {rec['hbm_bytes']:.3e} coll {coll:.3e}")
+            rows.append(rec)
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

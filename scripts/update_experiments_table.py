@@ -1,0 +1,43 @@
+"""Insert the generated roofline table into EXPERIMENTS.md (placeholder
+<!-- ROOFLINE_TABLE -->), single-pod rows first then multi-pod."""
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.roofline.analysis import report_table  # noqa: E402
+
+
+def main():
+    src = sys.argv[1] if len(sys.argv) > 1 else "results_baseline.json"
+    with open(src) as f:
+        records = json.load(f)
+    single = [r for r in records if r.get("mesh", "single_pod") == "single_pod"
+              or r.get("status") == "skipped"]
+    # skipped records appear once per mesh; dedupe by (arch, shape)
+    seen = set()
+    uniq = []
+    for r in single:
+        key = (r["arch"], r["shape"])
+        if key in seen:
+            continue
+        seen.add(key)
+        uniq.append(r)
+    table = report_table(uniq)
+    multi = [r for r in records if r.get("mesh") == "multi_pod"
+             and r.get("status") == "ok"]
+    mtable = report_table(multi)
+    block = (
+        "### Single-pod (256 chips) baseline\n\n" + table
+        + "\n\n### Multi-pod (512 chips) baseline\n\n" + mtable
+    )
+    with open("EXPERIMENTS.md") as f:
+        text = f.read()
+    text = text.replace("<!-- ROOFLINE_TABLE -->", block)
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(text)
+    print("table inserted:", len(uniq), "single-pod rows,", len(multi), "multi-pod rows")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.checkpoint.manager import CheckpointManager, restore, save
+
+__all__ = ["CheckpointManager", "save", "restore"]

@@ -1,0 +1,51 @@
+"""Assigned architecture configs (exact published dims) + reduced smoke variants.
+
+``get_config(name)`` -> full ModelConfig;  ``smoke_config(name)`` -> tiny same-family
+config for CPU tests;  ``ARCHS`` lists all ten assigned ids.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+ARCHS: List[str] = [
+    "whisper-medium",
+    "recurrentgemma-2b",
+    "deepseek-coder-33b",
+    "minitron-8b",
+    "deepseek-7b",
+    "qwen1.5-4b",
+    "qwen2-vl-7b",
+    "dbrx-132b",
+    "qwen3-moe-30b-a3b",
+    "rwkv6-7b",
+]
+
+_MODULES: Dict[str, str] = {
+    "whisper-medium": "repro.configs.whisper_medium",
+    "recurrentgemma-2b": "repro.configs.recurrentgemma_2b",
+    "deepseek-coder-33b": "repro.configs.deepseek_coder_33b",
+    "minitron-8b": "repro.configs.minitron_8b",
+    "deepseek-7b": "repro.configs.deepseek_7b",
+    "qwen1.5-4b": "repro.configs.qwen15_4b",
+    "qwen2-vl-7b": "repro.configs.qwen2_vl_7b",
+    "dbrx-132b": "repro.configs.dbrx_132b",
+    "qwen3-moe-30b-a3b": "repro.configs.qwen3_moe_30b_a3b",
+    "rwkv6-7b": "repro.configs.rwkv6_7b",
+}
+
+
+def _mod(name: str):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCHS}")
+    return importlib.import_module(_MODULES[name])
+
+
+def get_config(name: str) -> ModelConfig:
+    return _mod(name).CONFIG
+
+
+def smoke_config(name: str) -> ModelConfig:
+    return _mod(name).SMOKE

@@ -1,0 +1,32 @@
+"""dbrx-132b [moe]: 40L, d_model=6144, 48H (GQA kv=8), d_ff=10752, vocab=100352,
+MoE 16 experts top-4, fine-grained [hf:databricks/dbrx-base].
+"""
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="dbrx-132b",
+    family="moe",
+    n_layers=40,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=10752,
+    vocab=100352,
+    n_experts=16,
+    experts_per_token=4,
+    capacity_factor=1.25,
+    mlp="swiglu",
+    norm="layernorm",
+    rope_theta=500000.0,
+    fsdp=True,
+    dtype=jnp.bfloat16,
+)
+
+SMOKE = CONFIG.with_(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=96, vocab=256, n_experts=4, experts_per_token=2,
+    fsdp=False, dtype=jnp.float32,
+)

@@ -1,0 +1,94 @@
+"""Assigned input shapes and ShapeDtypeStruct stand-ins for every model input.
+
+The four LM shapes (seq_len x global_batch):
+  train_4k     4,096 x 256   -> lowers train_step
+  prefill_32k  32,768 x 32   -> lowers prefill (serve)
+  decode_32k   32,768 x 128  -> lowers serve_step (1 token, KV cache of seq_len)
+  long_500k    524,288 x 1   -> lowers serve_step; sub-quadratic archs only
+
+``input_specs`` returns weak-type-correct ShapeDtypeStructs (no allocation),
+shardable by the rules in :mod:`repro.distributed.sharding`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import get_model
+from repro.models.config import ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str            # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+    long_context: bool = False
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1, long_context=True),
+}
+
+
+def applicable(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    """(runs?, reason).  long_500k needs sub-quadratic attention."""
+    if shape.long_context and cfg.family not in ("rglru", "rwkv6"):
+        return False, "full quadratic attention at 512k is not deployable; skipped"
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the step function selected by ``shape.kind``.
+
+    train   -> {tokens, labels, loss_mask [, frames | patch_embeds]}
+    prefill -> {tokens [, frames | patch_embeds]}
+    decode  -> {token, pos, cache}
+    """
+    B, S = shape.global_batch, shape.seq_len
+    model = get_model(cfg)
+
+    if shape.kind == "train":
+        batch: Dict[str, Any] = {
+            "labels": SDS((B, S), jnp.int32),
+            "loss_mask": SDS((B, S), jnp.float32),
+        }
+        if cfg.family == "encdec":
+            batch["tokens"] = SDS((B, S), jnp.int32)
+            batch["frames"] = SDS((B, cfg.n_frames, cfg.d_model), cfg.dtype)
+        elif cfg.family == "vlm":
+            n_vis = min(cfg.n_vision_patches, S // 4)
+            batch["tokens"] = SDS((B, S - n_vis), jnp.int32)
+            batch["patch_embeds"] = SDS((B, n_vis, cfg.d_model), cfg.dtype)
+        else:
+            batch["tokens"] = SDS((B, S), jnp.int32)
+        return batch
+
+    if shape.kind == "prefill":
+        batch = {"tokens": SDS((B, S), jnp.int32)}
+        if cfg.family == "encdec":
+            batch["frames"] = SDS((B, cfg.n_frames, cfg.d_model), cfg.dtype)
+        elif cfg.family == "vlm":
+            n_vis = min(cfg.n_vision_patches, S // 4)
+            batch["tokens"] = SDS((B, S - n_vis), jnp.int32)
+            batch["patch_embeds"] = SDS((B, n_vis, cfg.d_model), cfg.dtype)
+        return batch
+
+    if shape.kind == "decode":
+        cache = model.abstract_cache(B, S)
+        return {
+            "token": SDS((B, 1), jnp.int32),
+            "pos": SDS((B,), jnp.int32),
+            "cache": cache,
+        }
+
+    raise ValueError(shape.kind)

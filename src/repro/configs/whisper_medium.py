@@ -1,0 +1,37 @@
+"""whisper-medium [audio]: enc-dec, 24L, d_model=1024, 16H (kv=16), d_ff=4096,
+vocab=51865 [arXiv:2212.04356].  Conv audio frontend is a STUB — ``input_specs``
+feeds precomputed (B, 1500, 1024) frame embeddings.
+
+vocab is padded 51865 -> 51872 (multiple of 32; /16 TP-shardable) per standard TPU
+practice; labels stay < 51865.
+"""
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium",
+    family="encdec",
+    modality="audio",
+    n_layers=24,
+    n_enc_layers=24,
+    n_dec_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab=51872,            # 51865 padded to /32
+    n_frames=1500,
+    norm="layernorm",
+    mlp="gelu",
+    qkv_bias=True,
+    tie_embeddings=True,    # whisper ties decoder embedding and output head
+    dtype=jnp.bfloat16,
+)
+
+SMOKE = CONFIG.with_(
+    n_layers=2, n_enc_layers=2, n_dec_layers=2,
+    d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+    d_ff=128, vocab=160, n_frames=12, dtype=jnp.float32,
+)

@@ -1,0 +1,5 @@
+from repro.data.pipeline import (
+    DataConfig, PrivateShardStore, StannisDataset, make_stannis_dataset,
+)
+
+__all__ = ["DataConfig", "PrivateShardStore", "StannisDataset", "make_stannis_dataset"]

@@ -1,0 +1,210 @@
+"""Logical-axis -> mesh-axis sharding rules (t5x-style), per architecture.
+
+Every parameter/activation carries a tuple of *logical* axis names (assigned by the
+model code via :mod:`repro.models.param`).  A rule table maps logical names to mesh
+axes; unlisted names are replicated.  This keeps DP/TP/EP/FSDP/SP decisions in ONE
+place per arch and makes §Perf sharding hillclimbs a one-line change.
+
+Mesh axes (production): ``("pod", "data", "model")`` multi-pod or ``("data",
+"model")`` single pod.  Smoke tests use a 1-device mesh with the same axis names so
+the same code paths run everywhere.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+# ---------------------------------------------------------------------------
+# Rule tables
+# ---------------------------------------------------------------------------
+
+# Baseline rules: tensor-parallel over "model", batch over ("pod","data").
+# fsdp=True additionally shards the big weight matrices' embed/ff axes over "data"
+# (ZeRO-3 style: XLA all-gathers them per layer under scan).
+def make_rules(
+    *,
+    fsdp: bool = False,
+    seq_shard: bool = False,
+    extra: Optional[Dict[str, MeshAxes]] = None,
+) -> Dict[str, MeshAxes]:
+    rules: Dict[str, MeshAxes] = {
+        # -- weights --
+        "layers": None,            # stacked-layer leading dim: never sharded
+        "embed": "data" if fsdp else None,   # d_model rows of big matrices
+        "vocab": "model",          # embedding/logit vocab dim
+        "heads": "model",          # query heads
+        "kv_heads": "model",       # kv heads (GSPMD pads if < |model|)
+        "head_dim": None,
+        "mlp": "model",            # ffn hidden
+        "experts": "model",        # MoE expert dim (EP)
+        "expert_mlp": None,        # per-expert ffn hidden
+        "lru": "model",            # RG-LRU / RWKV channel blocks
+        "conv": None,
+        "pos": None,
+        "norm": None,
+        # -- activations --
+        "batch": ("pod", "data"),
+        "seq": "data" if seq_shard else None,  # SP for long-context decode
+        "act_embed": None,
+        "act_heads": "model",
+        "act_kv_heads": "model",
+        "act_mlp": "model",
+        "act_vocab": "model",
+        "act_experts": "model",
+        "kv_seq": "data" if seq_shard else None,  # KV-cache seq dim (SP)
+    }
+    if extra:
+        rules.update(extra)
+    return rules
+
+
+def spec_for(axes: Tuple[Optional[str], ...], rules: Dict[str, MeshAxes]) -> P:
+    """Map a tuple of logical axis names to a PartitionSpec."""
+    parts = []
+    used: set = set()
+
+    def _usable(m: MeshAxes):
+        if m is None:
+            return None
+        if isinstance(m, str):
+            return None if m in used else m
+        got = tuple(a for a in m if a not in used)
+        return got if got else None
+
+    for name in axes:
+        mesh_axes = rules.get(name) if name is not None else None
+        mesh_axes = _usable(mesh_axes)
+        if mesh_axes is None:
+            parts.append(None)
+        else:
+            if isinstance(mesh_axes, str):
+                used.add(mesh_axes)
+            else:
+                used.update(mesh_axes)
+            parts.append(mesh_axes)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def specs_for_tree(axes_tree: PyTree, rules: Dict[str, MeshAxes]) -> PyTree:
+    """Map a pytree of logical-axis tuples to a pytree of PartitionSpecs."""
+    return jax.tree_util.tree_map(
+        lambda axes: spec_for(axes, rules),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(e, str) or e is None for e in x),
+    )
+
+
+def shardings_for_tree(
+    axes_tree: PyTree, rules: Dict[str, MeshAxes], mesh: Mesh
+) -> PyTree:
+    specs = specs_for_tree(axes_tree, rules)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _divisible_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Drop mesh axes whose product does not divide the dim size.
+
+    jit ARGUMENT shardings must divide exactly (GSPMD pads only intermediate
+    constraints), so e.g. a 56-head weight on a 16-way model axis falls back
+    to replicated on that dim — its memory footprint is then carried by the
+    other (FSDP/vocab/mlp) dims, and the *compute* still shards through the
+    uneven activation constraints in the model code.
+    """
+    parts = []
+    for i, part in enumerate(spec):
+        if part is None or i >= len(shape):
+            parts.append(None)
+            continue
+        axes = (part,) if isinstance(part, str) else tuple(part)
+        keep = []
+        prod = 1
+        for a in axes:
+            if a not in mesh.shape:
+                continue  # axis absent in this (smaller) mesh
+            n = mesh.shape[a]
+            if shape[i] % (prod * n) == 0:
+                keep.append(a)
+                prod *= n
+        parts.append(tuple(keep) if len(keep) > 1 else (keep[0] if keep else None))
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def arg_shardings_for_tree(
+    axes_tree: PyTree, shapes_tree: PyTree, rules: Dict[str, MeshAxes], mesh: Mesh
+) -> PyTree:
+    """NamedShardings for jit arguments: size-aware (divisibility-safe).
+
+    ``shapes_tree`` carries the leaf shapes (arrays or ShapeDtypeStructs in
+    the same structure as ``axes_tree``).
+    """
+    specs = specs_for_tree(axes_tree, rules)
+    is_spec = lambda x: isinstance(x, P)
+    shapes = jax.tree_util.tree_leaves(shapes_tree)
+    flat_specs = jax.tree_util.tree_leaves(specs, is_leaf=is_spec)
+    assert len(shapes) == len(flat_specs), (len(shapes), len(flat_specs))
+    fixed = [
+        NamedSharding(mesh, _divisible_spec(s, tuple(l.shape), mesh))
+        for s, l in zip(flat_specs, shapes)
+    ]
+    treedef = jax.tree_util.tree_structure(specs, is_leaf=is_spec)
+    return jax.tree_util.tree_unflatten(treedef, fixed)
+
+
+# ---------------------------------------------------------------------------
+# Activation constraint helper
+# ---------------------------------------------------------------------------
+
+_CURRENT_RULES: Dict[str, MeshAxes] = make_rules()
+_CONSTRAIN = True
+
+
+def set_rules(rules: Dict[str, MeshAxes], constrain: bool = True) -> None:
+    global _CURRENT_RULES, _CONSTRAIN
+    _CURRENT_RULES = rules
+    _CONSTRAIN = constrain
+
+
+def get_rules() -> Dict[str, MeshAxes]:
+    return _CURRENT_RULES
+
+
+def with_logical_constraint(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """``with_sharding_constraint`` by logical axis names; no-op outside a mesh."""
+    if not _CONSTRAIN:
+        return x
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or mesh.empty:
+            return x
+        axis_names = set(mesh.axis_names)
+    except Exception:
+        return x
+    spec = spec_for(tuple(axes), _CURRENT_RULES)
+    # Drop references to mesh axes that don't exist in the current (small) mesh.
+    clean = []
+    for part in spec:
+        if part is None:
+            clean.append(None)
+        elif isinstance(part, str):
+            clean.append(part if part in axis_names else None)
+        else:
+            kept = tuple(a for a in part if a in axis_names)
+            clean.append(kept if kept else None)
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*clean))
+    except Exception:
+        return x

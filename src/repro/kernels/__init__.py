@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+STANNIS itself contributes at the distribution layer; these kernels make the
+per-chip layer fast: flash/decode attention (transformer hot spots), RG-LRU
+and WKV6 scans (recurrent archs, chunked-parallel TPU forms), and int8
+quantization (the compressed-allreduce building block).
+
+Models call :mod:`repro.kernels.ops`; oracles live in :mod:`repro.kernels.ref`.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

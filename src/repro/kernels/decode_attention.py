@@ -1,0 +1,126 @@
+"""Single-token decode attention (the serving hot spot) as a Pallas kernel.
+
+Flash-decoding adapted to TPU: one query row per (batch, head) attends to the
+KV cache in VMEM-sized chunks; running (m, l, acc) stats carried in scratch
+across the innermost grid dimension (TPU sequential grid), masked by each
+batch row's valid cache length.  The valid length arrives as a (B, 1) int32
+block in SMEM-like VMEM — no scalar prefetch needed in interpret mode and the
+layout is also legal on hardware.
+
+q block is a single row (1, D); to keep the MXU fed the kv chunk (bk, D) is
+multiplied as (bk, D) x (D, 1) — a skinny matmul the TPU lowers to VPU+MXU
+hybrid; bk = 512 amortizes control overhead across the cache sweep.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    valid_ref, q_ref, k_ref, v_ref, o_ref,
+    m_ref, l_ref, acc_ref,
+    *,
+    scale: float,
+    window: Optional[int],
+    bk: int,
+    n_kv: int,
+):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    valid = valid_ref[0, 0]                                 # () int32
+    first_k = ik * bk
+    live = first_k < valid
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale         # (1, D)
+        k = k_ref[0, 0].astype(jnp.float32)                 # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)                 # (bk, D)
+        s = jax.lax.dot_general(                            # (1, bk)
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        k_pos = first_k + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        mask = k_pos < valid
+        if window is not None:
+            mask &= k_pos > (valid - 1 - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ik == n_kv - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention(
+    q: jax.Array,               # (B, 1, H, D)
+    k: jax.Array,               # (B, Skv, Hkv, D)  cache
+    v: jax.Array,
+    valid_len: jax.Array,       # (B,) int32
+    *,
+    window: Optional[int] = None,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, _, H, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    assert H % Hkv == 0
+    group = H // Hkv
+    bk = min(block_k, max(Skv, 8))
+
+    qt = jnp.moveaxis(q, 2, 1)                    # (B, H, 1, D)
+    kt = jnp.moveaxis(k, 2, 1)                    # (B, Hkv, Skv, D)
+    vt = jnp.moveaxis(v, 2, 1)
+    pad_k = (-Skv) % bk
+    if pad_k:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    n_kv = kt.shape[2] // bk
+    valid2 = valid_len.astype(jnp.int32).reshape(B, 1)
+
+    grid = (B, H, n_kv)
+    kernel = functools.partial(
+        _decode_kernel, scale=1.0 / math.sqrt(D), window=window, bk=bk, n_kv=n_kv
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, ik: (b, 0)),
+            pl.BlockSpec((1, 1, 1, D), lambda b, h, ik: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, ik, g=group: (b, h // g, ik, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, ik, g=group: (b, h // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, D), lambda b, h, ik: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(qt.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(valid2, qt, kt, vt)
+    return jnp.moveaxis(out, 1, 2)                # (B, 1, H, D)

@@ -1,0 +1,178 @@
+"""Jit'd public wrappers for every Pallas kernel, with CPU fallbacks.
+
+The model code calls THESE (never pallas_call directly).  Each op:
+  * dispatches to the Pallas kernel (interpret=True on CPU, compiled on TPU),
+  * exposes a ``use_kernel=False`` escape hatch to the jnp oracle,
+  * is differentiable: forward kernels carry a ``jax.custom_vjp`` whose
+    backward recomputes through the reference (flash-style recompute — the
+    residuals are the INPUTS, not the O(S^2) intermediates).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as R
+from repro.kernels.decode_attention import decode_attention as _decode_pallas
+from repro.kernels.flash_attention import flash_attention_fwd as _flash_pallas
+from repro.kernels.quantize import dequantize_int8 as _deq
+from repro.kernels.quantize import quantize_int8 as _quant_pallas
+from repro.kernels.rglru_scan import rglru_scan as _rglru_pallas
+from repro.kernels.rwkv6_scan import rwkv6_scan as _rwkv6_pallas
+
+
+# ---------------------------------------------------------------------------
+# flash attention (differentiable)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash_attention(q, k, v, causal, window, block, interpret):
+    return _flash_pallas(
+        q, k, v, causal=causal, window=window,
+        block_q=block, block_k=block, interpret=interpret,
+    )
+
+
+def _flash_fwd(q, k, v, causal, window, block, interpret):
+    out = _flash_attention(q, k, v, causal, window, block, interpret)
+    return out, (q, k, v)
+
+
+def _flash_bwd(causal, window, block, interpret, res, g):
+    q, k, v = res
+    # recompute through the oracle; XLA fuses this into a memory-bounded bwd
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: R.flash_attention_ref(
+            q_, k_, v_, causal=causal, window=window
+        ),
+        q, k, v,
+    )
+    return vjp(g)
+
+
+_flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *,
+    causal: bool = False,
+    window: Optional[int] = None,
+    block: int = 128,
+    interpret: bool = False,
+    use_kernel: bool = True,
+) -> jax.Array:
+    if not use_kernel:
+        return R.flash_attention_ref(q, k, v, causal=causal, window=window)
+    return _flash_attention(q, k, v, causal, window, block, interpret)
+
+
+# ---------------------------------------------------------------------------
+# decode attention (inference only — no vjp needed)
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, valid_len: jax.Array,
+    *,
+    window: Optional[int] = None,
+    block_k: int = 512,
+    interpret: bool = False,
+    use_kernel: bool = True,
+) -> jax.Array:
+    if not use_kernel:
+        return R.decode_attention_ref(q, k, v, valid_len, window=window)
+    return _decode_pallas(
+        q, k, v, valid_len, window=window, block_k=block_k, interpret=interpret
+    )
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU scan (differentiable)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _rglru(a, x, chunk, interpret):
+    return _rglru_pallas(a, x, chunk=chunk, interpret=interpret)
+
+
+def _rglru_fwd(a, x, chunk, interpret):
+    y = _rglru(a, x, chunk, interpret)
+    return y, (a, x)
+
+
+def _rglru_bwd(chunk, interpret, res, g):
+    a, x = res
+    _, vjp = jax.vjp(lambda a_, x_: R.rglru_scan_ref(a_, x_), a, x)
+    return vjp(g)
+
+
+_rglru.defvjp(_rglru_fwd, _rglru_bwd)
+
+
+def rglru_scan(
+    a: jax.Array, x: jax.Array, *,
+    chunk: int = 128, interpret: bool = False, use_kernel: bool = True,
+) -> jax.Array:
+    if not use_kernel:
+        return R.rglru_scan_ref(a, x)
+    return _rglru(a, x, chunk, interpret)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 scan (differentiable)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def _rwkv6(r, k, v, w, u, chunk, interpret):
+    return _rwkv6_pallas(r, k, v, w, u, chunk=chunk, interpret=interpret)
+
+
+def _rwkv6_fwd(r, k, v, w, u, chunk, interpret):
+    out = _rwkv6(r, k, v, w, u, chunk, interpret)
+    return out, (r, k, v, w, u)
+
+
+def _rwkv6_bwd(chunk, interpret, res, g):
+    r, k, v, w, u = res
+    _, vjp = jax.vjp(
+        lambda r_, k_, v_, w_, u_: R.rwkv6_scan_ref(r_, k_, v_, w_, u_),
+        r, k, v, w, u,
+    )
+    return vjp(g)
+
+
+_rwkv6.defvjp(_rwkv6_fwd, _rwkv6_bwd)
+
+
+def rwkv6_scan(
+    r, k, v, w, u, *,
+    chunk: int = 32, interpret: bool = False, use_kernel: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    if not use_kernel:
+        return R.rwkv6_scan_ref(r, k, v, w, u)
+    return _rwkv6(r, k, v, w, u, chunk, interpret)
+
+
+# ---------------------------------------------------------------------------
+# int8 quantize / dequantize
+# ---------------------------------------------------------------------------
+
+
+def quantize_int8(
+    x: jax.Array, noise: Optional[jax.Array] = None, *,
+    interpret: bool = False, use_kernel: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """x: (R, N).  noise None => deterministic nearest rounding (oracle path)."""
+    if noise is None or not use_kernel:
+        return R.quantize_int8_ref(x, noise)
+    return _quant_pallas(x, noise, interpret=interpret)
+
+
+dequantize_int8 = _deq

@@ -1,0 +1,73 @@
+"""Int8 gradient quantization with stochastic rounding — the compressed-
+allreduce building block (beyond-paper distributed optimization).
+
+Per-row symmetric quantization: scale = absmax / 127.  Stochastic rounding
+(floor(x/scale + uniform)) keeps E[q*scale] = x, so momentum-SGD stays
+unbiased; the residual (error feedback) is handled by the caller in
+:mod:`repro.distributed.allreduce`.
+
+Kernel layout: rows tiled to (block_rows, N) VMEM blocks; absmax reduce and
+the scale/round/clip are all VPU element ops — this kernel is purely
+bandwidth-bound, which is the point: it converts an ICI-bandwidth-bound
+allreduce into a (4x smaller) one at the cost of HBM traffic that overlaps.
+The uniform noise is passed in as an operand (generated with the training
+PRNG) so the kernel stays deterministic per seed on every backend.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _quant_kernel(x_ref, noise_ref, q_ref, scale_ref):
+    x = x_ref[...].astype(jnp.float32)                    # (br, N)
+    absmax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    scale = jnp.maximum(absmax / 127.0, 1e-12)
+    y = x / scale
+    q = jnp.floor(y + noise_ref[...].astype(jnp.float32))
+    q = jnp.clip(q, -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    scale_ref[...] = scale
+
+
+def quantize_int8(
+    x: jax.Array,               # (R, N) float
+    noise: jax.Array,           # (R, N) uniform [0,1)
+    *,
+    block_rows: int = 256,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    R, N = x.shape
+    br = min(block_rows, R)
+    pad = (-R) % br
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        noise = jnp.pad(noise, ((0, pad), (0, 0)))
+    Rp = x.shape[0]
+    q, scale = pl.pallas_call(
+        _quant_kernel,
+        grid=(Rp // br,),
+        in_specs=[
+            pl.BlockSpec((br, N), lambda i: (i, 0)),
+            pl.BlockSpec((br, N), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br, N), lambda i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Rp, N), jnp.int8),
+            jax.ShapeDtypeStruct((Rp, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, noise)
+    return q[:R], scale[:R]
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)

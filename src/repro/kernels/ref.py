@@ -1,0 +1,153 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+Each function is the mathematical definition, written for clarity not speed;
+tests sweep shapes/dtypes and assert the kernels match these.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def flash_attention_ref(
+    q: jax.Array,               # (B, Sq, H, D)
+    k: jax.Array,               # (B, Skv, Hkv, D)
+    v: jax.Array,               # (B, Skv, Hkv, D)
+    *,
+    causal: bool = False,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    B, Sq, H, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    if Hkv != H:
+        reps = H // Hkv
+        k = jnp.repeat(k, reps, axis=2)
+        v = jnp.repeat(v, reps, axis=2)
+    scale = 1.0 / math.sqrt(D)
+    logits = jnp.einsum(
+        "bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    q_pos = jnp.arange(Sq) + q_offset
+    k_pos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask &= k_pos[None, :] > (q_pos[:, None] - window)
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)  # fully-masked rows
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jax.Array,               # (B, 1, H, D)
+    k: jax.Array,               # (B, Skv, Hkv, D)  (cache)
+    v: jax.Array,               # (B, Skv, Hkv, D)
+    valid_len: jax.Array,       # (B,) int32 — positions < valid_len attend
+    *,
+    window: Optional[int] = None,
+) -> jax.Array:
+    B, _, H, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    if Hkv != H:
+        reps = H // Hkv
+        k = jnp.repeat(k, reps, axis=2)
+        v = jnp.repeat(v, reps, axis=2)
+    scale = 1.0 / math.sqrt(D)
+    logits = jnp.einsum(
+        "bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    k_pos = jnp.arange(Skv)[None, :]
+    mask = k_pos < valid_len[:, None]
+    if window is not None:
+        mask &= k_pos > (valid_len[:, None] - 1 - window)
+    logits = jnp.where(mask[:, None, None, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32)).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Linear recurrences
+# ---------------------------------------------------------------------------
+
+
+def rglru_scan_ref(
+    a: jax.Array,               # (B, S, W) decay in (0, 1)
+    x: jax.Array,               # (B, S, W) gated input
+    h0: Optional[jax.Array] = None,  # (B, W)
+) -> jax.Array:
+    """h_t = a_t * h_{t-1} + x_t; returns all h_t. float32 internally."""
+    af, xf = a.astype(jnp.float32), x.astype(jnp.float32)
+
+    def step(h, inp):
+        at, xt = inp
+        h = at * h + xt
+        return h, h
+
+    h_init = jnp.zeros((a.shape[0], a.shape[2]), jnp.float32) if h0 is None \
+        else h0.astype(jnp.float32)
+    _, ys = jax.lax.scan(
+        step, h_init, (jnp.moveaxis(af, 1, 0), jnp.moveaxis(xf, 1, 0))
+    )
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+
+
+def rwkv6_scan_ref(
+    r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,  # (B, S, H, D)
+    u: jax.Array,                                            # (H, D)
+    s0: Optional[jax.Array] = None,                          # (B, H, D, D)
+) -> Tuple[jax.Array, jax.Array]:
+    """out_t = r_t @ (S_{t-1} + u*k_t (x) v_t);  S_t = diag(w_t) S_{t-1} + k_t (x) v_t."""
+    B, S, H, D = r.shape
+    s = jnp.zeros((B, H, D, D), jnp.float32) if s0 is None else s0.astype(jnp.float32)
+
+    def step(s, xs):
+        rt, kt, vt, wt = xs
+        kv = kt[..., :, None] * vt[..., None, :]
+        out = jnp.einsum("bhd,bhde->bhe", rt, s + u[..., :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, out
+
+    xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (r, k, v, w))
+    s, outs = jax.lax.scan(step, s, xs)
+    return jnp.moveaxis(outs, 0, 1).astype(r.dtype), s
+
+
+# ---------------------------------------------------------------------------
+# Gradient quantization (compressed allreduce)
+# ---------------------------------------------------------------------------
+
+
+def quantize_int8_ref(
+    x: jax.Array,               # (..., N) float
+    noise: Optional[jax.Array] = None,  # same shape, U[0,1) for stochastic rounding
+) -> Tuple[jax.Array, jax.Array]:
+    """Per-row symmetric int8: scale = absmax/127; stochastic or nearest round.
+
+    Returns (q int8, scale f32 with trailing dim 1).
+    """
+    xf = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax / 127.0, 1e-12)
+    y = xf / scale
+    if noise is None:
+        q = jnp.round(y)
+    else:
+        q = jnp.floor(y + noise.astype(jnp.float32))
+    q = jnp.clip(q, -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8_ref(q: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)

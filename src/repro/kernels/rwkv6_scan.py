@@ -1,0 +1,140 @@
+"""RWKV-6 WKV recurrence as a chunked-parallel Pallas kernel.
+
+The recurrence (per batch, head; state S in R^{DxD}):
+    out_t = r_t @ (S_{t-1} + diag(u) k_t v_t^T)
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T
+
+TPU adaptation — chunked linear attention (GLA-style), NOT a token-serial
+port: for a chunk of length L with per-channel log-decays lw_t = log w_t and
+prefix sums  cum_t = sum_{j<=t} lw_j:
+
+    inter-chunk:  out  = (r_t * exp(cum_{t-1})) @ S_0          (one (L,D)x(D,D) MXU matmul)
+    intra-chunk:  A_{t,j} = sum_d r_t[d] k_j[d] exp(cum_{t-1,d} - cum_{j,d}),  j <  t
+                  A_{t,t} = sum_d r_t[d] u[d] k_t[d]
+                  out += A @ V                                  ((L,L)x(L,D) MXU matmul)
+    state:        S_L  = diag(exp(cum_L)) S_0 + (k * exp(cum_L - cum))^T @ V
+
+Every exponent above is <= 0 (decays only accumulate), so the chunked form is
+overflow-safe WITHOUT the unstable 1/decay factorization a naive CUDA port
+would use.  The intra-chunk pairwise decay is materialized as an (L, L, D)
+masked tensor — with L = 32, D = 64 that is 256 KB of VMEM, well inside
+budget, and the two big matmuls dominate on the MXU.  The state (D, D) is
+carried across chunks in VMEM scratch (sequential innermost grid dim).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv6_kernel(
+    r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, sfin_ref,
+    s_ref,                    # (D, D) f32 scratch — the carried state
+    *,
+    L: int,
+    n_chunks: int,
+):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0, 0].astype(jnp.float32)       # (L, D)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    lw = lw_ref[0, 0].astype(jnp.float32)     # (L, D) log-decay (<= 0)
+    u = u_ref[0].astype(jnp.float32)          # (D,)
+    s0 = s_ref[...]                           # (D, D)
+
+    cum = jnp.cumsum(lw, axis=0)              # (L, D), cum_t = sum_{j<=t}
+    cum_prev = cum - lw                       # sum_{j<t}
+
+    # inter-chunk: r_t scaled by accumulated decay hits the carried state
+    q_eff = r * jnp.exp(cum_prev)             # exponent <= 0
+    out = jax.lax.dot_general(
+        q_eff, s0, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                         # (L, D)
+
+    # intra-chunk: pairwise decayed attention, strictly lower triangular
+    # decay[t, j, d] = exp(cum_prev[t, d] - cum[j, d])  for j < t  (<= 0 exp)
+    expo = cum_prev[:, None, :] - cum[None, :, :]         # (L, L, D)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0) > \
+        jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    decay = jnp.where(tri[:, :, None], jnp.exp(jnp.minimum(expo, 0.0)), 0.0)
+    attn = jnp.einsum("td,jd,tjd->tj", r, k, decay)       # (L, L)
+    bonus = jnp.sum(r * u[None, :] * k, axis=1)           # (L,) diagonal term
+    attn = attn + jnp.diag(bonus)
+    out = out + jax.lax.dot_general(
+        attn, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    o_ref[0, 0] = out.astype(o_ref.dtype)
+
+    # state update: S_L = diag(exp(cum_L)) S0 + (k * exp(cum_L - cum))^T V
+    cum_L = cum[L - 1]                                     # (D,)
+    k_dec = k * jnp.exp(cum_L[None, :] - cum)              # exponent <= 0
+    s_new = jnp.exp(cum_L)[:, None] * s0 + jax.lax.dot_general(
+        k_dec, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    s_ref[...] = s_new
+
+    @pl.when(ic == n_chunks - 1)
+    def _emit_state():
+        sfin_ref[0, 0] = s_new
+
+
+def rwkv6_scan(
+    r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,  # (B, S, H, D)
+    u: jax.Array,                                            # (H, D)
+    *,
+    chunk: int = 32,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (out (B, S, H, D), final_state (B, H, D, D))."""
+    B, S, H, D = r.shape
+    L = min(chunk, S)
+    pad = (-S) % L
+    # log-decay; padded steps get lw = 0 (w = 1: state passes through).
+    # Floor 1e-30 (NOT 1e-38: that is subnormal in f32 and XLA's flush-to-zero
+    # turns it into log(0) = -inf); e^-69 per step is already total decay.
+    lw = jnp.log(jnp.maximum(w.astype(jnp.float32), 1e-30))
+    rt = jnp.moveaxis(r, 2, 1)        # (B, H, S, D)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    lwt = jnp.moveaxis(lw, 2, 1)
+    if pad:
+        cfg = ((0, 0), (0, 0), (0, pad), (0, 0))
+        rt, kt, vt = (jnp.pad(t, cfg) for t in (rt, kt, vt))
+        lwt = jnp.pad(lwt, cfg)       # zeros: w = 1 pass-through
+    Sp = rt.shape[2]
+    n_chunks = Sp // L
+
+    grid = (B, H, n_chunks)
+    out, s_fin = pl.pallas_call(
+        functools.partial(_wkv6_kernel, L=L, n_chunks=n_chunks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, L, D), lambda b, h, ic: (b, h, ic, 0)),
+            pl.BlockSpec((1, 1, L, D), lambda b, h, ic: (b, h, ic, 0)),
+            pl.BlockSpec((1, 1, L, D), lambda b, h, ic: (b, h, ic, 0)),
+            pl.BlockSpec((1, 1, L, D), lambda b, h, ic: (b, h, ic, 0)),
+            pl.BlockSpec((1, D), lambda b, h, ic: (h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, L, D), lambda b, h, ic: (b, h, ic, 0)),
+            pl.BlockSpec((1, 1, D, D), lambda b, h, ic: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, Sp, D), r.dtype),
+            jax.ShapeDtypeStruct((B, H, D, D), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((D, D), jnp.float32)],
+        interpret=interpret,
+    )(rt, kt, vt, lwt, u)
+    out = jnp.moveaxis(out, 1, 2)[:, :S]
+    return out, s_fin

@@ -1,0 +1,43 @@
+"""Production mesh construction.
+
+Functions (never module-level constants) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS before first jax use.
+
+Production target: TPU v5e pods, 16x16 = 256 chips per pod.
+  single pod: ("data", "model") = (16, 16)
+  multi-pod:  ("pod", "data", "model") = (2, 16, 16) = 512 chips
+Stannis dp-groups live along ("pod", "data"); tensor/expert parallel along
+"model".
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(
+    *, data: int = 1, model: int = 1, axis_names: Tuple[str, ...] = ("data", "model")
+) -> Mesh:
+    """Small mesh over however many (CPU) devices exist — smoke tests."""
+    n = len(jax.devices())
+    assert data * model <= n, (data, model, n)
+    return jax.make_mesh(
+        (data, model), axis_names, axis_types=(AxisType.Auto,) * 2
+    )
+
+
+# Hardware constants (TPU v5e-class) used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link (effective)
+HBM_BYTES = 16 * 1024 ** 3      # per chip

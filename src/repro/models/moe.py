@@ -1,0 +1,400 @@
+"""Mixture-of-Experts decoder LM (dbrx-132b: 16e top-4; qwen3-moe-30b-a3b: 128e top-8).
+
+Expert parallelism: expert weights carry the ``experts`` logical axis which the
+sharding rules map onto the ``model`` mesh axis.  Token dispatch uses the
+sort-by-expert + capacity layout (MaxText/GShard style, but with gather/scatter
+instead of one-hot einsum so memory is O(E·C·d) not O(T·E·C)); under pjit the
+scatter from token-sharded activations into expert-sharded buffers lowers to an
+all-to-all.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import with_logical_constraint as wlc
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.param import ParamBuilder, build, scaled_init, stacked
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# MoE layer
+# ---------------------------------------------------------------------------
+
+
+def init_moe_mlp(b, name: str, d_model: int, d_ff: int, n_experts: int):
+    s = b.scope(name)
+    s.param("router", (d_model, n_experts), ("embed", "experts"), init=scaled_init(0))
+    s.param("wi_gate", (n_experts, d_model, d_ff),
+            ("experts", "embed", "expert_mlp"), init=scaled_init(-2))
+    s.param("wi_up", (n_experts, d_model, d_ff),
+            ("experts", "embed", "expert_mlp"), init=scaled_init(-2))
+    s.param("wo", (n_experts, d_ff, d_model),
+            ("experts", "expert_mlp", "embed"), init=scaled_init(-2))
+
+
+def expert_capacity(n_tokens: int, n_experts: int, k: int, capacity_factor: float) -> int:
+    c = int(n_tokens * k * capacity_factor / n_experts)
+    return max(8, ((c + 127) // 128) * 128)  # MXU-aligned
+
+
+# Dispatch implementation: "auto" picks the shard_map group-local path when a
+# mesh with a >1 "model" axis is active (the production EP path); "dense"
+# forces the single-program gather/scatter path (the GSPMD-auto baseline the
+# perf log measures against).  Env REPRO_MOE_IMPL overrides (perf A/B).
+import os as _os
+
+MOE_IMPL = _os.environ.get("REPRO_MOE_IMPL", "auto")
+
+
+def moe_mlp(p: Dict, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_loss); dispatches on MOE_IMPL."""
+    if MOE_IMPL == "auto":
+        try:
+            mesh = jax.sharding.get_abstract_mesh()
+        except Exception:
+            mesh = None
+        if (
+            mesh is not None and not mesh.empty
+            and "model" in mesh.axis_names and mesh.shape["model"] > 1
+            and cfg.n_experts % mesh.shape["model"] == 0
+        ):
+            return _moe_mlp_local(p, x, cfg, mesh)
+    return _moe_mlp_dense(p, x, cfg)
+
+
+def _moe_mlp_local(
+    p: Dict, x: jax.Array, cfg: ModelConfig, mesh
+) -> Tuple[jax.Array, jax.Array]:
+    """Group-local EP dispatch (GShard grouped capacity), zero all-to-all.
+
+    Layout: token groups = dp shards (("pod","data") slices of the batch);
+    experts sharded over "model".  Device (g, j) routes ITS tokens to ITS
+    experts only, with per-group capacity C/n_groups — dispatch gather and
+    combine scatter are LOCAL.  Each expert's shards across j see disjoint
+    token groups, so expert compute is pure data parallelism; the only
+    communication is the combine psum of (T_loc, d) over "model" — the same
+    collective a dense TP MLP needs anyway.
+
+    vs the GSPMD-auto dense path: the compiler partitions the global
+    gather/scatter by REPLICATING the (T·k, d) token-copy tensor per device
+    (~69 GB f32 for qwen3-30b at 4k·256) and all-reducing it; this path
+    removes those entirely.
+    """
+    from repro.distributed.sharding import get_rules
+
+    E, k = cfg.n_experts, cfg.experts_per_token
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n_groups = 1
+    for a in dp_axes:
+        n_groups *= mesh.shape[a]
+    n_model = mesh.shape["model"]
+    E_loc = E // n_model
+    B, S, d = x.shape
+    T = B * S
+    C_group = expert_capacity(T // max(1, n_groups), E, k, cfg.capacity_factor)
+
+    # DP-attention layout: batch rows also sharded over "model".  The group's
+    # tokens are reconstituted with an EXPLICIT tiled all-gather (and the
+    # combined output returned with a psum_scatter) — letting GSPMD reshard
+    # instead triggers involuntary full rematerialization (replicate+slice).
+    batch_rule = get_rules().get("batch")
+    rule_axes = (batch_rule,) if isinstance(batch_rule, str) else tuple(batch_rule or ())
+    over_model = "model" in rule_axes and (B % (n_groups * n_model) == 0)
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    def local_fn(router, wg, wu, wo, xl):
+        # xl: (B_loc, S, d); wg/wu/wo: (E_loc, ...); router replicated
+        if over_model:
+            xl = jax.lax.all_gather(xl, "model", axis=0, tiled=True)
+        Bl = xl.shape[0]
+        Tl = Bl * S
+        xf = xl.reshape(Tl, d)
+        logits = (xf @ router.astype(jnp.float32)).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)                 # (Tl, E)
+        gate_vals, expert_ids = jax.lax.top_k(probs, k)
+        gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+        # Switch aux from GLOBAL stats: psum the (E,) vectors over dp.
+        # bincount, not one_hot: the (Tl, k, E) one-hot costs 268 MB of HBM
+        # traffic per layer at qwen3 dims; the bincount is (Tl*k) ints.
+        tok_frac = (
+            jnp.bincount(expert_ids.reshape(-1), length=E).astype(jnp.float32)
+            / expert_ids.shape[0]
+        )
+        prob_frac = jnp.mean(probs, axis=0)
+        if dp_axes:
+            tok_frac = jax.lax.pmean(tok_frac, dp_axes)
+            prob_frac = jax.lax.pmean(prob_frac, dp_axes)
+        aux = E * jnp.sum(tok_frac * prob_frac)
+
+        # local experts on this model shard
+        e0 = jax.lax.axis_index("model") * E_loc
+        flat_expert = expert_ids.reshape(-1)                    # (Tl*k,)
+        flat_token = jnp.repeat(jnp.arange(Tl), k)
+        flat_gate = gate_vals.reshape(-1)
+        local_e = flat_expert - e0                              # in [0, E_loc)?
+        is_local = (local_e >= 0) & (local_e < E_loc)
+
+        order = jnp.argsort(jnp.where(is_local, local_e, E_loc), stable=True)
+        se = local_e[order]
+        st = flat_token[order]
+        sg = flat_gate[order]
+        sl = is_local[order]
+
+        counts = jnp.bincount(jnp.where(is_local, local_e, E_loc),
+                              length=E_loc + 1)[:E_loc]
+        offsets = jnp.concatenate(
+            [jnp.zeros(1, counts.dtype), jnp.cumsum(counts)[:-1]]
+        )
+        pos_in_e = jnp.arange(Tl * k) - offsets[jnp.clip(se, 0, E_loc - 1)]
+        keep = sl & (pos_in_e < C_group)
+        slot = jnp.where(keep, se * C_group + pos_in_e, E_loc * C_group)
+
+        # compact dispatch: scatter token INDICES (ints) into slots, then
+        # gather exactly (E_loc*C, d) rows — materializing xf[st] first would
+        # move the full (Tl*k, d) copy tensor (~12x larger than the buffer)
+        slot_tok = jnp.zeros((E_loc * C_group + 1,), jnp.int32).at[slot].set(
+            st.astype(jnp.int32))
+        slot_ok = jnp.zeros((E_loc * C_group + 1,), jnp.bool_).at[slot].set(keep)
+        buf = xf[slot_tok[: E_loc * C_group]]
+        buf = buf * slot_ok[: E_loc * C_group, None].astype(buf.dtype)
+        buf = buf.reshape(E_loc, C_group, d)
+
+        g = jnp.einsum("ecd,edf->ecf", buf, wg.astype(buf.dtype))
+        u = jnp.einsum("ecd,edf->ecf", buf, wu.astype(buf.dtype))
+        h = jax.nn.silu(g) * u
+        y = jnp.einsum("ecf,efd->ecd", h, wo.astype(buf.dtype))
+
+        yf = y.reshape(E_loc * C_group, d)
+        safe_slot = jnp.minimum(slot, E_loc * C_group - 1)
+        out_copies = yf[safe_slot] * (sg * keep)[:, None].astype(yf.dtype)
+        out = jnp.zeros((Tl, d), yf.dtype).at[st].add(out_copies)
+        out = out.reshape(Bl, S, d)
+        # combine partial expert outputs across the model axis; in the
+        # DP-attention layout fuse the combine with the re-scatter (RS costs
+        # half an AR and lands directly in the 256-way layout)
+        if over_model:
+            out = jax.lax.psum_scatter(out, "model", scatter_dimension=0,
+                                       tiled=True)
+        else:
+            out = jax.lax.psum(out, "model")
+        return out, aux.astype(jnp.float32)
+
+    if over_model:
+        batch_spec = (*dp_axes, "model")
+    else:
+        batch_spec = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None)
+    out, aux = shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(
+            P(), P("model"), P("model"), P("model"),
+            P(batch_spec, None, None),
+        ),
+        out_specs=(P(batch_spec, None, None), P()),
+        check_rep=False,
+    )(p["router"], p["wi_gate"], p["wi_up"], p["wo"], x)
+    out = wlc(out, "batch", "seq", "act_embed")
+    return out, aux
+
+
+def _moe_mlp_dense(p: Dict, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """Single-program gather/scatter dispatch (GSPMD-auto partitioning).
+
+    Top-k routing with normalized gates; load-balancing aux loss (Switch-style):
+    ``E * Σ_e f_e · p_e`` where f_e = token fraction, p_e = mean router prob.
+    """
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.experts_per_token
+    T = B * S
+    C = expert_capacity(T, E, k, cfg.capacity_factor)
+    xf = x.reshape(T, d)
+
+    router_logits = (xf @ p["router"].astype(jnp.float32)).astype(jnp.float32)
+    probs = jax.nn.softmax(router_logits, axis=-1)              # (T, E)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)             # (T, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # aux load-balance loss
+    tok_frac = jnp.mean(
+        jax.nn.one_hot(expert_ids, E, dtype=jnp.float32).sum(axis=1), axis=0
+    )                                                           # (E,)
+    prob_frac = jnp.mean(probs, axis=0)                         # (E,)
+    aux = E * jnp.sum(tok_frac * prob_frac)
+
+    # ---- dispatch: sort token-copies by expert, take first C per expert ----
+    flat_expert = expert_ids.reshape(-1)                        # (T*k,)
+    flat_token = jnp.repeat(jnp.arange(T), k)                   # (T*k,)
+    flat_gate = gate_vals.reshape(-1)                           # (T*k,)
+
+    order = jnp.argsort(flat_expert, stable=True)               # group by expert
+    se = flat_expert[order]
+    st = flat_token[order]
+    sg = flat_gate[order]
+
+    counts = jnp.bincount(flat_expert, length=E)                # (E,)
+    offsets = jnp.concatenate([jnp.zeros(1, counts.dtype), jnp.cumsum(counts)[:-1]])
+    pos_in_expert = jnp.arange(T * k) - offsets[se]
+    keep = pos_in_expert < C
+    slot = jnp.where(keep, se * C + pos_in_expert, E * C)       # overflow -> dump row
+
+    # scatter tokens into expert buffers (E*C+1, d); final row is the dump
+    gathered = xf[st] * keep[:, None].astype(xf.dtype)
+    buf = jnp.zeros((E * C + 1, d), xf.dtype).at[slot].set(gathered)
+    buf = buf[: E * C].reshape(E, C, d)
+    buf = wlc(buf, "act_experts", None, None)
+
+    # ---- expert compute (per-expert SwiGLU) ----
+    g = jnp.einsum("ecd,edf->ecf", buf, p["wi_gate"].astype(buf.dtype))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["wi_up"].astype(buf.dtype))
+    h = jax.nn.silu(g) * u
+    h = wlc(h, "act_experts", None, None)
+    y = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(buf.dtype))
+
+    # ---- combine: gather back token copies, weight by gates, sum over k ----
+    yf = y.reshape(E * C, d)
+    safe_slot = jnp.minimum(slot, E * C - 1)
+    out_copies = yf[safe_slot] * (sg * keep)[:, None].astype(yf.dtype)
+    out = jnp.zeros((T, d), yf.dtype).at[st].add(out_copies)
+    out = wlc(out.reshape(B, S, d), "batch", "seq", "act_embed")
+    return out, aux.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Model = dense skeleton with MoE FFN
+# ---------------------------------------------------------------------------
+
+
+def _init_block(s, cfg: ModelConfig):
+    hd = cfg.resolved_head_dim()
+    L.init_rmsnorm(s, "ln1", cfg.d_model)
+    L.init_attention(
+        s, "attn", cfg.d_model, cfg.n_heads, cfg.n_kv_heads, hd, qkv_bias=cfg.qkv_bias
+    )
+    L.init_rmsnorm(s, "ln2", cfg.d_model)
+    init_moe_mlp(s, "moe", cfg.d_model, cfg.d_ff, cfg.n_experts)
+
+
+def init_params(cfg: ModelConfig, key=None, abstract=False, dtype=None):
+    dtype = dtype or cfg.dtype
+
+    def f(b: ParamBuilder):
+        L.init_embedding(b, "embedding", cfg.vocab, cfg.d_model)
+        _init_block(stacked(b, cfg.n_layers).scope("blocks"), cfg)
+        L.init_rmsnorm(b, "ln_f", cfg.d_model)
+        if not cfg.tie_embeddings:
+            L.init_embedding(b, "lm_head", cfg.vocab, cfg.d_model)
+
+    return build(f, key=key, abstract=abstract, dtype=dtype)
+
+
+def _block_train(lp, x, cfg: ModelConfig, positions):
+    h = L.rms_norm(lp["ln1"], x)
+    h = L.attention_train(
+        lp["attn"], h, positions=positions, causal=True, window=cfg.window,
+        rope_theta=cfg.rope_theta,
+    )
+    x = x + h
+    h = L.rms_norm(lp["ln2"], x)
+    y, aux = moe_mlp(lp["moe"], h, cfg)
+    return x + y, aux
+
+
+def forward(params, cfg: ModelConfig, tokens, **_) -> Tuple[jax.Array, jax.Array]:
+    """-> (logits, total_aux_loss)."""
+    x = L.embed(params["embedding"], tokens, cfg.dtype)
+    positions = jnp.arange(x.shape[1])
+
+    def body(lp, h):
+        return _block_train(lp, h, cfg, positions)
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    if cfg.scan_layers:
+        def step(carry, lp):
+            h, aux = carry
+            h, a = fn(lp, h)
+            return (h, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(step, (x, jnp.zeros((), jnp.float32)), params["blocks"])
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(cfg.n_layers):
+            lp = jax.tree_util.tree_map(lambda a: a[i], params["blocks"])
+            x, a = fn(lp, x)
+            aux = aux + a
+
+    from repro.models.dense import _final
+
+    return _final(params, x, cfg), aux
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype=None):
+    from repro.models import dense
+
+    return dense.init_cache(cfg, batch, cache_len, dtype)
+
+
+def cache_logical_axes(cfg: ModelConfig):
+    from repro.models import dense
+
+    return dense.cache_logical_axes(cfg)
+
+
+def prefill(params, cfg: ModelConfig, tokens, cache_len: int, **_):
+    x = L.embed(params["embedding"], tokens, cfg.dtype)
+    positions = jnp.arange(x.shape[1])
+
+    def body(lp, h):
+        hn = L.rms_norm(lp["ln1"], h)
+        attn_out, kv = L.attention_prefill(
+            lp["attn"], hn, positions=positions, cache_len=cache_len,
+            causal=True, window=cfg.window, rope_theta=cfg.rope_theta,
+        )
+        h = h + attn_out
+        hn = L.rms_norm(lp["ln2"], h)
+        y, _aux = moe_mlp(lp["moe"], hn, cfg)
+        return h + y, kv
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+
+    if cfg.scan_layers:
+        x, cache = jax.lax.scan(lambda c, lp: fn(lp, c), x, params["blocks"])
+    else:
+        ks, vs = [], []
+        for i in range(cfg.n_layers):
+            lp = jax.tree_util.tree_map(lambda a: a[i], params["blocks"])
+            x, kv = fn(lp, x)
+            ks.append(kv["k"])
+            vs.append(kv["v"])
+        cache = {"k": jnp.stack(ks), "v": jnp.stack(vs)}
+    from repro.models.dense import _final
+
+    return _final(params, x[:, -1:], cfg), cache
+
+
+def decode_step(params, cfg: ModelConfig, token, cache, pos):
+    x = L.embed(params["embedding"], token, cfg.dtype)
+
+    def body(h, xs):
+        lp, kv = xs
+        hn = L.rms_norm(lp["ln1"], h)
+        attn_out, kv = L.attention_decode(
+            lp["attn"], hn, kv, pos=pos, window=cfg.window, rope_theta=cfg.rope_theta
+        )
+        h = h + attn_out
+        hn = L.rms_norm(lp["ln2"], h)
+        y, _aux = moe_mlp(lp["moe"], hn, cfg)
+        return h + y, kv
+
+    from repro.models.dense import _final, _maybe_unrolled_scan
+
+    x, new_cache = _maybe_unrolled_scan(cfg, body, x, (params["blocks"], cache))
+    return _final(params, x, cfg), new_cache

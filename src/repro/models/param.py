@@ -1,0 +1,180 @@
+"""Parameter builder: one code path yields concrete params, abstract shapes, and
+logical-axis annotations.
+
+Every model in ``repro.models`` creates its parameters through a :class:`ParamBuilder`.
+The builder runs in one of two modes:
+
+* ``concrete`` — leaves are real ``jnp`` arrays (used by smoke tests / real training).
+* ``abstract`` — leaves are ``jax.ShapeDtypeStruct`` (used by the multi-pod dry-run;
+  no device memory is ever allocated).
+
+In both modes the builder records a parallel pytree of *logical axis names* per leaf
+(e.g. ``("layers", "embed", "mlp")``).  ``repro.distributed.sharding`` maps logical
+axes onto mesh axes with a per-arch rule table, producing the ``PartitionSpec`` trees
+consumed by ``jax.jit(in_shardings=...)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+# ---------------------------------------------------------------------------
+# Initializers (shape, dtype, key) -> array
+# ---------------------------------------------------------------------------
+
+
+def normal_init(stddev: float = 0.02) -> Callable:
+    def init(key, shape, dtype):
+        return (jax.random.normal(key, shape, jnp.float32) * stddev).astype(dtype)
+
+    return init
+
+
+def scaled_init(fan_in_axis: int = -2) -> Callable:
+    """LeCun-style 1/sqrt(fan_in) initializer (fan-in read from shape)."""
+
+    def init(key, shape, dtype):
+        fan_in = shape[fan_in_axis] if len(shape) >= 2 else shape[-1]
+        std = 1.0 / math.sqrt(max(1, fan_in))
+        return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+    return init
+
+
+def zeros_init() -> Callable:
+    def init(key, shape, dtype):
+        return jnp.zeros(shape, dtype)
+
+    return init
+
+
+def ones_init() -> Callable:
+    def init(key, shape, dtype):
+        return jnp.ones(shape, dtype)
+
+    return init
+
+
+def constant_init(value: float) -> Callable:
+    def init(key, shape, dtype):
+        return jnp.full(shape, value, dtype)
+
+    return init
+
+
+def uniform_init(lo: float, hi: float) -> Callable:
+    def init(key, shape, dtype):
+        return jax.random.uniform(
+            key, shape, jnp.float32, minval=lo, maxval=hi
+        ).astype(dtype)
+
+    return init
+
+
+# ---------------------------------------------------------------------------
+# Builder
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ParamBuilder:
+    """Collects parameters into a nested-dict pytree with logical axis metadata."""
+
+    key: Optional[jax.Array]
+    abstract: bool
+    dtype: Any
+    params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    axes: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    _counter: int = 0
+
+    # -- scoping ------------------------------------------------------------
+    def scope(self, name: str) -> "ParamBuilder":
+        child = ParamBuilder(key=self.key, abstract=self.abstract, dtype=self.dtype)
+        self.params[name] = child.params
+        self.axes[name] = child.axes
+        # Children share the parent key; uniqueness comes from fold_in counters.
+        child._parent = self  # type: ignore[attr-defined]
+        return child
+
+    def _next_key(self) -> Optional[jax.Array]:
+        root = self
+        while getattr(root, "_parent", None) is not None:
+            root = root._parent  # type: ignore[attr-defined]
+        root._counter += 1
+        if root.key is None:
+            return None
+        return jax.random.fold_in(root.key, root._counter)
+
+    # -- parameter creation ---------------------------------------------------
+    def param(
+        self,
+        name: str,
+        shape: Sequence[int],
+        axes: Tuple[Optional[str], ...],
+        init: Optional[Callable] = None,
+        dtype: Any = None,
+    ):
+        assert len(shape) == len(axes), (name, shape, axes)
+        dtype = dtype or self.dtype
+        if self.abstract:
+            leaf = jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+        else:
+            init = init or normal_init()
+            leaf = init(self._next_key(), tuple(int(s) for s in shape), dtype)
+        self.params[name] = leaf
+        self.axes[name] = tuple(axes)
+        return leaf
+
+
+class StackedBuilder:
+    """View over a ParamBuilder that prepends a stacked-layer dim to every param.
+
+    Used for scan-over-layers models: all per-layer params get shape ``(L, ...)``
+    and logical axes ``("layers", ...)``.
+    """
+
+    def __init__(self, inner, n: int):
+        self._inner = inner
+        self._n = n
+
+    def scope(self, name: str) -> "StackedBuilder":
+        return StackedBuilder(self._inner.scope(name), self._n)
+
+    def param(self, name, shape, axes, init=None, dtype=None):
+        return self._inner.param(
+            name, (self._n, *shape), ("layers", *axes), init=init, dtype=dtype
+        )
+
+
+def stacked(b, n: int) -> StackedBuilder:
+    return StackedBuilder(b, n)
+
+
+def build(
+    fn: Callable[[ParamBuilder], None],
+    *,
+    key: Optional[jax.Array] = None,
+    abstract: bool = False,
+    dtype: Any = jnp.float32,
+) -> Tuple[PyTree, PyTree]:
+    """Run ``fn(builder)`` and return ``(params, logical_axes)`` pytrees."""
+    b = ParamBuilder(key=key, abstract=abstract, dtype=dtype)
+    fn(b)
+    return b.params, b.axes
+
+
+def count_params(params: PyTree) -> int:
+    leaves = jax.tree_util.tree_leaves(params)
+    return int(sum(int(np.prod(l.shape)) for l in leaves))
+
+
+def param_bytes(params: PyTree) -> int:
+    leaves = jax.tree_util.tree_leaves(params)
+    return int(sum(int(np.prod(l.shape)) * l.dtype.itemsize for l in leaves))

@@ -1,0 +1,110 @@
+"""Qwen2-VL backbone: dense llama-style decoder with M-RoPE (arXiv:2409.12191).
+
+The vision patch frontend is a STUB per the assignment: ``input_specs()`` supplies
+precomputed patch embeddings (B, n_patches, d_model) which are concatenated before
+the text-token embeddings.  M-RoPE splits head_dim/2 frequency pairs into
+(temporal, height, width) sections — config sections (16, 24, 24) for head_dim 128.
+
+M-RoPE position ids: text tokens advance all three streams together; vision patches
+advance height/width over the (stub) patch grid at a fixed temporal position.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import dense, layers as L
+from repro.models.config import ModelConfig
+
+PyTree = Any
+
+
+def init_params(cfg: ModelConfig, key=None, abstract=False, dtype=None):
+    return dense.init_params(cfg, key=key, abstract=abstract, dtype=dtype)
+
+
+def mrope_positions(cfg: ModelConfig, batch: int, seq: int,
+                    grid: Optional[int] = None,
+                    n_vis: Optional[int] = None) -> jax.Array:
+    """Build (3, B, S) position ids: vision prefix (t fixed; h/w over grid) then text."""
+    n_vis = min(cfg.n_vision_patches, seq) if n_vis is None else n_vis
+    grid = grid or max(1, int(n_vis ** 0.5))
+    i = jnp.arange(seq)
+    is_vis = i < n_vis
+    h_pos = jnp.where(is_vis, i // grid, 0)
+    w_pos = jnp.where(is_vis, i % grid, 0)
+    # text positions continue from the max vision position
+    start = jnp.maximum(grid, 1)
+    t_pos = jnp.where(is_vis, 0, i - n_vis + start)
+    h = jnp.where(is_vis, h_pos, t_pos)
+    w = jnp.where(is_vis, w_pos, t_pos)
+    pos3 = jnp.stack([jnp.where(is_vis, 0, t_pos), h, w])     # (3, S)
+    return jnp.broadcast_to(pos3[:, None], (3, batch, seq))
+
+
+def forward(params, cfg: ModelConfig, tokens: jax.Array, *,
+            patch_embeds: Optional[jax.Array] = None, **_) -> jax.Array:
+    """tokens: (B, S_text); patch_embeds: (B, n_patches, d) stub frontend output.
+
+    Total sequence = [patches | text]; logits returned for all positions.
+    """
+    if patch_embeds is not None:
+        text = L.embed(params["embedding"], tokens, cfg.dtype)
+        x = jnp.concatenate([patch_embeds.astype(cfg.dtype), text], axis=1)
+        n_vis = patch_embeds.shape[1]
+    else:
+        x = L.embed(params["embedding"], tokens, cfg.dtype)
+        n_vis = None
+    B, S = x.shape[0], x.shape[1]
+    mpos = mrope_positions(cfg, B, S, n_vis=n_vis)
+    return dense.forward(
+        params, cfg, tokens, inputs_embeds=x, mrope_positions=mpos
+    )
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype=None):
+    cache = dense.init_cache(cfg, batch, cache_len, dtype)
+    # rope position of text token at sequence index i is i + mrope_offset
+    cache["mrope_offset"] = jnp.zeros((batch,), jnp.int32)
+    return cache
+
+
+def cache_logical_axes(cfg: ModelConfig):
+    axes = dense.cache_logical_axes(cfg)
+    axes["mrope_offset"] = ("batch",)
+    return axes
+
+
+def decode_step(params, cfg: ModelConfig, token, cache, pos):
+    # Past the multimodal prefix, all three M-RoPE streams advance together,
+    # so text decode is EXACT standard RoPE at the M-RoPE text position
+    # pos + offset (offset = grid_start - n_vis, carried in the cache).
+    offset = cache["mrope_offset"]
+    kv = {"k": cache["k"], "v": cache["v"]}
+    logits, kv = dense.decode_step(params, cfg, token, kv, pos,
+                                   rope_offset=offset)
+    kv["mrope_offset"] = offset
+    return logits, kv
+
+
+def prefill(params, cfg: ModelConfig, tokens, cache_len: int, *,
+            patch_embeds: Optional[jax.Array] = None, **_):
+    """Multimodal prefill: [patches | text] with M-RoPE phases in the cache."""
+    if patch_embeds is not None:
+        text = L.embed(params["embedding"], tokens, cfg.dtype)
+        x = jnp.concatenate([patch_embeds.astype(cfg.dtype), text], axis=1)
+        n_vis = patch_embeds.shape[1]
+    else:
+        x = L.embed(params["embedding"], tokens, cfg.dtype)
+        n_vis = min(cfg.n_vision_patches, x.shape[1])
+    B, S = x.shape[0], x.shape[1]
+    mpos = mrope_positions(cfg, B, S, n_vis=n_vis)
+    logits, cache = dense.prefill(
+        params, cfg, tokens, cache_len, inputs_embeds=x, mrope_positions=mpos
+    )
+    grid = max(1, int(n_vis ** 0.5))
+    start = max(grid, 1)
+    cache["mrope_offset"] = jnp.full((B,), start - n_vis, jnp.int32)
+    return logits, cache

@@ -1,0 +1,13 @@
+"""Optimizers and LR schedules (no external deps — built in JAX per the scope).
+
+SGD-momentum (the paper trains with SGD) and AdamW (LM-standard), plus the
+Goyal et al. accuracy-preserving schedule the paper cites: linear LR scaling
+with global batch size + gradual warmup.
+"""
+from repro.optim.optimizers import OptState, adamw, sgd_momentum, Optimizer
+from repro.optim.schedules import goyal_schedule, linear_scaled_lr, warmup_cosine
+
+__all__ = [
+    "OptState", "Optimizer", "adamw", "sgd_momentum",
+    "goyal_schedule", "linear_scaled_lr", "warmup_cosine",
+]

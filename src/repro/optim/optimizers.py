@@ -1,0 +1,90 @@
+"""SGD-momentum and AdamW as pure (state, grads) -> (state, updates) functions.
+
+Shape-generic over pytrees; optimizer state carries the same logical axes as
+the parameters so ZeRO-1 sharding of optimizer state falls out of the same
+rule table (see :mod:`repro.distributed.sharding`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class OptState(NamedTuple):
+    step: jax.Array          # () int32
+    mu: PyTree               # first moment / momentum
+    nu: Optional[PyTree]     # second moment (None for SGD)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    """init(params) -> state;  update(grads, state, params, lr) -> (new_state, new_params)."""
+
+    init: Callable[[PyTree], OptState]
+    update: Callable[[PyTree, OptState, PyTree, jax.Array], Tuple[OptState, PyTree]]
+    # how many extra param-sized buffers the state holds (for memory analysis)
+    state_factor: int = 1
+
+
+def _zeros_like_f32(params: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def sgd_momentum(momentum: float = 0.9, nesterov: bool = False,
+                 weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return OptState(step=jnp.zeros((), jnp.int32), mu=_zeros_like_f32(params), nu=None)
+
+    def update(grads, state, params, lr):
+        def upd(g, m, p):
+            g = g.astype(jnp.float32)
+            if weight_decay:
+                g = g + weight_decay * p.astype(jnp.float32)
+            m_new = momentum * m + g
+            d = g + momentum * m_new if nesterov else m_new
+            return m_new, (p.astype(jnp.float32) - lr * d).astype(p.dtype)
+
+        flat = jax.tree_util.tree_map(upd, grads, state.mu, params)
+        mu = jax.tree_util.tree_map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_p = jax.tree_util.tree_map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+        return OptState(step=state.step + 1, mu=mu, nu=None), new_p
+
+    return Optimizer(init=init, update=update, state_factor=1)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            mu=_zeros_like_f32(params),
+            nu=_zeros_like_f32(params),
+        )
+
+    def update(grads, state, params, lr):
+        t = (state.step + 1).astype(jnp.float32)
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m_new = b1 * m + (1 - b1) * g
+            v_new = b2 * v + (1 - b2) * g * g
+            mhat = m_new / c1
+            vhat = v_new / c2
+            step = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+            return m_new, v_new, (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+        flat = jax.tree_util.tree_map(upd, grads, state.mu, state.nu, params)
+        is_t = lambda x: isinstance(x, tuple)
+        mu = jax.tree_util.tree_map(lambda t: t[0], flat, is_leaf=is_t)
+        nu = jax.tree_util.tree_map(lambda t: t[1], flat, is_leaf=is_t)
+        new_p = jax.tree_util.tree_map(lambda t: t[2], flat, is_leaf=is_t)
+        return OptState(step=state.step + 1, mu=mu, nu=nu), new_p
+
+    return Optimizer(init=init, update=update, state_factor=2)

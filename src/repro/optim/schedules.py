@@ -1,0 +1,56 @@
+"""LR schedules.  The paper (§IV, citing Goyal et al. 2017) preserves accuracy
+under distribution via (a) linear LR scaling with the global batch and (b) a
+warmup that ramps from a low LR — both implemented here as pure step->lr fns.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]  # step -> lr
+
+
+def linear_scaled_lr(base_lr: float, global_batch: int, base_batch: int = 256) -> float:
+    """Goyal linear scaling rule: lr = base_lr * global_batch / base_batch."""
+    return base_lr * global_batch / base_batch
+
+
+def goyal_schedule(
+    base_lr: float,
+    global_batch: int,
+    *,
+    base_batch: int = 256,
+    warmup_steps: int = 500,
+    total_steps: int = 100_000,
+    final_frac: float = 0.1,
+) -> Schedule:
+    """Warmup from base_lr -> scaled lr over ``warmup_steps`` (gradual warmup),
+    then linear decay to ``final_frac`` of the scaled LR."""
+    peak = linear_scaled_lr(base_lr, global_batch, base_batch)
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr + (peak - base_lr) * jnp.minimum(step / max(1, warmup_steps), 1.0)
+        frac = jnp.clip(
+            (step - warmup_steps) / max(1, total_steps - warmup_steps), 0.0, 1.0
+        )
+        decay = peak * (1.0 - (1.0 - final_frac) * frac)
+        return jnp.where(step < warmup_steps, warm, decay)
+
+    return lr
+
+
+def warmup_cosine(
+    peak_lr: float, warmup_steps: int = 500, total_steps: int = 100_000,
+    final_lr: float = 0.0,
+) -> Schedule:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * jnp.minimum(step / max(1, warmup_steps), 1.0)
+        t = jnp.clip((step - warmup_steps) / max(1, total_steps - warmup_steps), 0.0, 1.0)
+        cos = final_lr + 0.5 * (peak_lr - final_lr) * (1 + jnp.cos(math.pi * t))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return lr

@@ -1,0 +1,127 @@
+"""Three-term roofline from dry-run records.
+
+    compute    = HLO_FLOPs_per_chip / 197e12 FLOP/s
+    memory     = HLO_bytes_per_chip / 819e9  B/s
+    collective = wire_bytes_per_chip / 50e9  B/s per link
+
+``compiled.cost_analysis()`` analyzes the post-SPMD-partitioning module, so
+its FLOPs/bytes are already PER-DEVICE (verified: a (64x1024)@(1024x1024)
+matmul on 16 devices reports 8.4e6 = 2*64*1024*1024/16).  Collective wire
+bytes are parsed per-device from the same HLO.  MODEL_FLOPS = 6·N·D
+(active-N for MoE) gives the useful-compute ratio — remat recompute, padding
+waste, and replicated math all show up as HLO/MODEL > 1.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, List, Optional
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops: float
+    useful_ratio: float       # MODEL_FLOPS / HLO_FLOPs
+    dominant: str
+    roofline_fraction: float  # dominant-term share of the ideal (compute) time
+
+    def row(self) -> str:
+        return (
+            f"| {self.arch} | {self.shape} | {self.mesh} | "
+            f"{self.compute_s:.4f} | {self.memory_s:.4f} | {self.collective_s:.4f} | "
+            f"{self.dominant} | {self.useful_ratio:.2f} | {self.roofline_fraction:.2f} |"
+        )
+
+
+def _tokens_for(rec: Dict[str, Any]) -> float:
+    """Tokens processed by one step of this cell (decode: one per row)."""
+    from repro.configs.shapes import SHAPES
+
+    s = SHAPES[rec["shape"]]
+    if s.kind == "train":
+        return s.global_batch * s.seq_len
+    if s.kind == "prefill":
+        return s.global_batch * s.seq_len
+    return s.global_batch  # decode: 1 new token per sequence
+
+
+def roofline_terms(rec: Dict[str, Any]) -> Optional[RooflineReport]:
+    if rec.get("status") != "ok":
+        return None
+    chips = rec["n_devices"]
+    # cost_analysis numbers are per-device (post-partitioning module)
+    compute_s = rec["flops"] / PEAK_FLOPS_BF16
+    memory_s = rec["hbm_bytes"] / HBM_BW
+    coll_bytes = sum(rec.get("collective_bytes", {}).values())
+    collective_s = coll_bytes / ICI_BW  # per-device wire bytes
+
+    from repro.configs.shapes import SHAPES
+
+    s = SHAPES[rec["shape"]]
+    n = rec["active_params"] if rec["active_params"] else rec["params"]
+    tokens = _tokens_for(rec)
+    if s.kind == "train":
+        model_flops = 6.0 * n * tokens
+    else:  # forward only
+        model_flops = 2.0 * n * tokens
+
+    hlo = max(rec["flops"], 1.0)          # per-device
+    terms = {
+        "compute": compute_s, "memory": memory_s, "collective": collective_s
+    }
+    dominant = max(terms, key=terms.get)
+    total = max(terms.values())
+    # fraction of roofline: the unavoidable compute time over the actual
+    # bottleneck time (1.0 = running at the compute roofline)
+    ideal = model_flops / (chips * PEAK_FLOPS_BF16)
+    frac = ideal / total if total > 0 else 0.0
+    return RooflineReport(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        model_flops=model_flops, hlo_flops=rec["flops"],
+        useful_ratio=model_flops / chips / hlo,
+        dominant=dominant, roofline_fraction=min(frac, 1.0),
+    )
+
+
+def report_table(records: List[Dict[str, Any]]) -> str:
+    head = (
+        "| arch | shape | mesh | compute s | memory s | collective s | "
+        "bottleneck | useful | roofline |\n"
+        "|---|---|---|---|---|---|---|---|---|"
+    )
+    rows = []
+    for rec in records:
+        r = roofline_terms(rec)
+        if r is not None:
+            rows.append(r.row())
+        elif rec.get("status") == "skipped":
+            rows.append(
+                f"| {rec['arch']} | {rec['shape']} | — | — | — | — | "
+                f"skipped: {rec['why'][:40]} | — | — |"
+            )
+    return "\n".join([head, *rows])
+
+
+def main(argv=None):
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("results", help="dry-run JSON")
+    args = ap.parse_args(argv)
+    with open(args.results) as f:
+        records = json.load(f)
+    print(report_table(records))
+
+
+if __name__ == "__main__":
+    main()

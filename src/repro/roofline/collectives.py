@@ -1,0 +1,104 @@
+"""Parse collective wire-bytes out of post-partitioning HLO text.
+
+``compiled.cost_analysis()`` does not attribute collective traffic, so we
+scan the optimized (per-device) HLO for collective ops and convert each to
+*bytes on the wire per device* using the ring-schedule accounting:
+
+    all-reduce          2 * result * (n-1)/n     (reduce-scatter + all-gather)
+    all-gather          result * (n-1)/n         (result is the gathered size)
+    reduce-scatter      result * (n-1)           (operand = result * n)
+    all-to-all          result * (n-1)/n
+    collective-permute  result                   (pairwise)
+
+``n`` is the collective's group size parsed from ``replica_groups`` — this is
+what lets the roofline distinguish a 16-way intra-pod ring from a 2-way
+cross-pod hop.  Shapes in the compiled module are already per-device.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+          "collective-permute")
+
+# %name = f32[128,1024]{1,0} all-reduce(...), ... replica_groups=[4,4]<=[16]
+_LINE_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\S+))\s+"                     # result shape (or tuple)
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\("
+)
+_SHAPE_RE = re.compile(
+    r"(f64|f32|bf16|f16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred|c64|c128)"
+    r"\[([0-9,]*)\]"
+)
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        n = 1
+        dims = m.group(2)
+        if dims.strip():
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[m.group(1)]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))           # [num_groups, group_size]
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2                             # pairwise / unknown: conservative
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Per-device wire bytes per collective kind (see module docstring)."""
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        kind, suffix = m.group(3), m.group(4)
+        if suffix == "-done":
+            continue                     # async pair: count the -start only
+        result_bytes = _shape_bytes(m.group(1) or m.group(2))
+        n = _group_size(line)
+        if kind == "all-reduce":
+            wire = 2 * result_bytes * (n - 1) / n
+        elif kind == "all-gather":
+            wire = result_bytes * (n - 1) / n
+        elif kind == "reduce-scatter":
+            wire = result_bytes * (n - 1)
+        elif kind == "all-to-all":
+            wire = result_bytes * (n - 1) / n
+        else:                            # collective-permute
+            wire = result_bytes
+        out[kind] = out.get(kind, 0) + int(wire)
+    return out
+
+
+def collective_ops_from_hlo(hlo_text: str) -> List[Tuple[str, int, int]]:
+    """(kind, result_bytes, group_size) per op — for the perf-loop's HLO diffs."""
+    ops = []
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m or m.group(4) == "-done":
+            continue
+        ops.append(
+            (m.group(3), _shape_bytes(m.group(1) or m.group(2)), _group_size(line))
+        )
+    return ops

@@ -1,0 +1,4 @@
+from repro.train.steps import loss_fn, make_serve_step, make_train_step
+from repro.train.trainer import Trainer, TrainerConfig
+
+__all__ = ["loss_fn", "make_train_step", "make_serve_step", "Trainer", "TrainerConfig"]

@@ -1,0 +1,122 @@
+"""train_step / serve_step factories: the functions that get pjit'd.
+
+``make_train_step`` builds the masked-weighted-loss training step
+(:mod:`repro.core.hetero` semantics): per-token CE, multiplied by the combined
+row-validity x token mask, summed and normalized GLOBALLY, so heterogeneous
+group batch sizes are numerically exact.  ``make_serve_step`` builds the
+one-token KV-cache decode step for the inference shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hetero import masked_mean_loss
+from repro.models.api import Model
+from repro.optim.optimizers import Optimizer, OptState
+
+PyTree = Any
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Per-token CE, numerically stable. logits (B,S,V) f32/bf16; labels (B,S)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return lse - gold
+
+
+def loss_fn(
+    model: Model,
+    params: PyTree,
+    batch: Dict[str, jax.Array],
+    *,
+    aux_weight: float = 0.01,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Masked global-mean LM loss (+ router aux for MoE)."""
+    kwargs = {}
+    for k in ("frames", "patch_embeds"):
+        if k in batch:
+            kwargs[k] = batch[k]
+    logits, aux = model.forward(params, batch["tokens"], **kwargs)
+    # VLM: logits cover [patches | text]; score text positions only
+    labels = batch["labels"]
+    mask = batch["loss_mask"]
+    if logits.shape[1] != labels.shape[1]:
+        logits = logits[:, -labels.shape[1]:]
+    ce = cross_entropy(logits, labels)
+    loss = masked_mean_loss(ce, mask)
+    total = loss + aux_weight * aux
+    return total, {"loss": loss, "aux": aux, "tokens": jnp.sum(mask)}
+
+
+def make_train_step(
+    model: Model,
+    optimizer: Optimizer,
+    lr_schedule: Callable[[jax.Array], jax.Array],
+    *,
+    aux_weight: float = 0.01,
+    grad_transform: Optional[Callable[[PyTree], PyTree]] = None,
+) -> Callable:
+    """Returns ``train_step(params, opt_state, batch) -> (params, opt_state, metrics)``.
+
+    ``grad_transform`` hooks the beyond-paper compressed/ring allreduce in
+    (identity under plain pjit where XLA inserts the psum itself).
+    """
+
+    def train_step(params, opt_state: OptState, batch):
+        (total, parts), grads = jax.value_and_grad(
+            lambda p: loss_fn(model, p, batch, aux_weight=aux_weight), has_aux=True
+        )(params)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        lr = lr_schedule(opt_state.step)
+        opt_state, params = optimizer.update(grads, opt_state, params, lr)
+        # NOTE: elementwise square + sum, NOT vdot — vdot reshapes each leaf
+        # to 1-D, which GSPMD can only partition by all-gathering the whole
+        # (f32-upcast) tensor; measured at +4.5 GB/layer on qwen3-moe.
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree_util.tree_leaves(grads))
+        )
+        metrics = {
+            "loss": parts["loss"],
+            "aux": parts["aux"],
+            "total": total,
+            "lr": lr,
+            "grad_norm": gnorm,
+            "tokens": parts["tokens"],
+        }
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model, *, aux_weight: float = 0.01) -> Callable:
+    def eval_step(params, batch):
+        _, parts = loss_fn(model, params, batch, aux_weight=aux_weight)
+        return parts
+
+    return eval_step
+
+
+def make_serve_step(model: Model) -> Callable:
+    """One-token decode: (params, token, cache, pos) -> (next_token, logits, cache)."""
+
+    def serve_step(params, token, cache, pos):
+        logits, cache = model.decode_step(params, token, cache, pos)
+        next_token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_token[:, None], logits, cache
+
+    return serve_step
+
+
+def make_prefill_step(model: Model, cache_len: int) -> Callable:
+    def prefill_step(params, tokens, **kwargs):
+        return model.prefill(params, tokens, cache_len, **kwargs)
+
+    return prefill_step

@@ -1,0 +1,125 @@
+"""Checkpoint: atomic save/restore, CRC, rotation, async, elastic re-shard."""
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager, latest_step, restore, save
+
+
+@pytest.fixture
+def tree():
+    k = jax.random.PRNGKey(0)
+    return {
+        "params": {"w": jax.random.normal(k, (8, 16)), "b": jnp.zeros(16)},
+        "opt": {"mu": jnp.ones((8, 16)), "step": jnp.int32(7)},
+    }
+
+
+def test_roundtrip(tmp_path, tree):
+    save(str(tmp_path), 10, tree, metadata={"step": 10})
+    got, meta = restore(str(tmp_path), tree)
+    assert meta["step"] == 10
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(got)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_latest_valid_wins(tmp_path, tree):
+    save(str(tmp_path), 1, tree)
+    save(str(tmp_path), 2, tree)
+    assert latest_step(str(tmp_path)) == 2
+
+
+def test_corrupt_checkpoint_skipped(tmp_path, tree):
+    save(str(tmp_path), 1, tree)
+    p2 = save(str(tmp_path), 2, tree)
+    os.remove(os.path.join(p2, "manifest.json"))   # simulate crash mid-write
+    assert latest_step(str(tmp_path)) == 1         # falls back to newest valid
+
+
+def test_crc_detects_corruption(tmp_path, tree):
+    p = save(str(tmp_path), 1, tree)
+    # flip bytes in one leaf file
+    fn = [f for f in os.listdir(p) if f.endswith(".npy")][0]
+    path = os.path.join(p, fn)
+    arr = np.load(path)
+    arr = arr.copy()
+    arr.reshape(-1)[0] += 1.0 if arr.dtype.kind == "f" else 1
+    np.save(path, arr)
+    with pytest.raises(IOError):
+        restore(str(tmp_path), tree, verify_crc=True)
+
+
+def test_rotation(tmp_path, tree):
+    m = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        m.save(s, tree)
+    steps = sorted(
+        int(n.split("_")[1]) for n in os.listdir(tmp_path) if n.startswith("step_")
+    )
+    assert steps == [3, 4]
+
+
+def test_async_save(tmp_path, tree):
+    m = CheckpointManager(str(tmp_path), keep=3)
+    m.save(5, tree, async_=True)
+    m.wait()
+    got, _ = m.restore(tree)
+    np.testing.assert_array_equal(got["params"]["w"], tree["params"]["w"])
+
+
+def test_tmp_dir_never_visible(tmp_path, tree):
+    save(str(tmp_path), 1, tree)
+    assert not any(n.endswith(".tmp") for n in os.listdir(tmp_path))
+
+
+def test_shape_mismatch_raises(tmp_path, tree):
+    save(str(tmp_path), 1, tree)
+    wrong = jax.tree_util.tree_map(lambda x: x, tree)
+    wrong["params"]["w"] = jnp.zeros((4, 4))
+    with pytest.raises(ValueError):
+        restore(str(tmp_path), wrong)
+
+
+def test_elastic_reshard_subprocess(tmp_path, tree):
+    """Save on 1 device, restore re-sharded onto an 8-device mesh (dp=8) and
+    onto dp=4 — the elastic-restart path."""
+    import subprocess
+    import sys
+    import textwrap
+
+    save(str(tmp_path), 3, tree)
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    code = f"""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+        from repro.checkpoint.manager import restore
+        like = {{
+            "params": {{"w": jnp.zeros((8, 16)), "b": jnp.zeros(16)}},
+            "opt": {{"mu": jnp.zeros((8, 16)), "step": jnp.int32(0)}},
+        }}
+        for dp in (8, 4, 2):
+            mesh = jax.make_mesh((dp,), ("data",), axis_types=(AxisType.Auto,))
+            sh = {{
+                "params": {{"w": NamedSharding(mesh, P("data", None)),
+                           "b": NamedSharding(mesh, P())}},
+                "opt": {{"mu": NamedSharding(mesh, P("data", None)),
+                        "step": NamedSharding(mesh, P())}},
+            }}
+            got, _ = restore({str(tmp_path)!r}, like, shardings=sh)
+            assert got["params"]["w"].sharding.num_devices == dp
+            assert int(got["opt"]["step"]) == 7
+        print("ELASTIC OK")
+    """
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "ELASTIC OK" in out.stdout

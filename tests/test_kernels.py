@@ -1,0 +1,203 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret=True)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels import ref as R
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FLASH_CASES = [
+    # B, Sq, Skv, H, Hkv, D, causal, window, dtype
+    (2, 128, 128, 4, 4, 64, False, None, jnp.float32),
+    (2, 128, 128, 4, 2, 64, True, None, jnp.float32),
+    (1, 256, 256, 8, 1, 64, True, 64, jnp.float32),
+    (2, 100, 100, 4, 4, 32, True, None, jnp.float32),
+    (1, 64, 64, 2, 2, 128, True, None, jnp.bfloat16),
+    (1, 64, 64, 2, 1, 16, False, 16, jnp.float32),
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES, ids=[str(c[:8]) for c in FLASH_CASES])
+def test_flash_attention_matches_oracle(case):
+    B, Sq, Skv, H, Hkv, D, causal, window, dtype = case
+    ks = jax.random.split(KEY, 3)
+    q = _rand(ks[0], (B, Sq, H, D), dtype)
+    k = _rand(ks[1], (B, Skv, Hkv, D), dtype)
+    v = _rand(ks[2], (B, Skv, Hkv, D), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              block=64, interpret=True)
+    ref = R.flash_attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), ref.astype(jnp.float32), atol=tol, rtol=tol
+    )
+
+
+def test_flash_attention_grad_matches_oracle():
+    ks = jax.random.split(KEY, 3)
+    q = _rand(ks[0], (1, 64, 2, 32), jnp.float32)
+    k = _rand(ks[1], (1, 64, 2, 32), jnp.float32)
+    v = _rand(ks[2], (1, 64, 2, 32), jnp.float32)
+    g1 = jax.grad(lambda q: ops.flash_attention(
+        q, k, v, causal=True, interpret=True).sum())(q)
+    g2 = jax.grad(lambda q: R.flash_attention_ref(q, k, v, causal=True).sum())(q)
+    np.testing.assert_allclose(g1, g2, atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+DECODE_CASES = [
+    (2, 256, 4, 4, 64, None, jnp.float32),
+    (3, 300, 8, 2, 64, 128, jnp.float32),
+    (1, 64, 4, 1, 32, None, jnp.float32),
+    (2, 128, 2, 2, 128, None, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", DECODE_CASES, ids=[str(c[:6]) for c in DECODE_CASES])
+def test_decode_attention_matches_oracle(case):
+    B, Skv, H, Hkv, D, window, dtype = case
+    ks = jax.random.split(KEY, 4)
+    q = _rand(ks[0], (B, 1, H, D), dtype)
+    k = _rand(ks[1], (B, Skv, Hkv, D), dtype)
+    v = _rand(ks[2], (B, Skv, Hkv, D), dtype)
+    valid = jax.random.randint(ks[3], (B,), 1, Skv + 1)
+    out = ops.decode_attention(q, k, v, valid, window=window,
+                               block_k=128, interpret=True)
+    ref = R.decode_attention_ref(q, k, v, valid, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), ref.astype(jnp.float32), atol=tol, rtol=tol
+    )
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU scan
+# ---------------------------------------------------------------------------
+
+RGLRU_CASES = [
+    (2, 64, 128, jnp.float32),
+    (1, 100, 300, jnp.float32),
+    (3, 256, 64, jnp.float32),
+    (1, 33, 96, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", RGLRU_CASES, ids=[str(c[:3]) for c in RGLRU_CASES])
+def test_rglru_scan_matches_oracle(case):
+    B, S, W, dtype = case
+    ks = jax.random.split(KEY, 2)
+    a = (jax.nn.sigmoid(jax.random.normal(ks[0], (B, S, W))) * 0.99).astype(dtype)
+    x = _rand(ks[1], (B, S, W), dtype)
+    out = ops.rglru_scan(a, x, chunk=32, interpret=True)
+    ref = R.rglru_scan_ref(a, x)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), ref.astype(jnp.float32), atol=tol, rtol=tol
+    )
+
+
+def test_rglru_extreme_decay_stable():
+    """Near-zero decays (log a ~ -150) must not overflow the chunked form."""
+    B, S, W = 1, 64, 32
+    a = jnp.full((B, S, W), 1e-30, jnp.float32)
+    x = jnp.ones((B, S, W), jnp.float32)
+    out = ops.rglru_scan(a, x, chunk=16, interpret=True)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    np.testing.assert_allclose(out, R.rglru_scan_ref(a, x), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 scan
+# ---------------------------------------------------------------------------
+
+RWKV_CASES = [
+    (2, 64, 2, 32, 16, jnp.float32),
+    (1, 100, 4, 64, 32, jnp.float32),
+    (2, 32, 2, 16, 32, jnp.float32),
+    (1, 48, 2, 64, 16, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", RWKV_CASES, ids=[str(c[:5]) for c in RWKV_CASES])
+def test_rwkv6_scan_matches_oracle(case):
+    B, S, H, D, chunk, dtype = case
+    ks = jax.random.split(KEY, 5)
+    r = _rand(ks[0], (B, S, H, D), dtype) * 0.5
+    k = _rand(ks[1], (B, S, H, D), dtype) * 0.5
+    v = _rand(ks[2], (B, S, H, D), dtype) * 0.5
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (B, S, H, D)))).astype(dtype)
+    u = _rand(ks[4], (H, D), jnp.float32) * 0.5
+    out, s_fin = ops.rwkv6_scan(r, k, v, w, u, chunk=chunk, interpret=True)
+    ref, s_ref = R.rwkv6_scan_ref(r, k, v, w, u)
+    tol = 5e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), ref.astype(jnp.float32), atol=tol, rtol=tol
+    )
+    np.testing.assert_allclose(s_fin, s_ref, atol=tol, rtol=tol)
+
+
+def test_rwkv6_extreme_decay_stable():
+    """w -> 0 (log w ~ -148 after the model's clip) must stay finite — the
+    overflow-safe chunking claim."""
+    B, S, H, D = 1, 64, 1, 16
+    ks = jax.random.split(KEY, 4)
+    r = _rand(ks[0], (B, S, H, D), jnp.float32)
+    k = _rand(ks[1], (B, S, H, D), jnp.float32)
+    v = _rand(ks[2], (B, S, H, D), jnp.float32)
+    w = jnp.full((B, S, H, D), jnp.exp(-jnp.exp(5.0)), jnp.float32)  # ~e^-148
+    u = jnp.zeros((H, D), jnp.float32)
+    out, s = ops.rwkv6_scan(r, k, v, w, u, chunk=16, interpret=True)
+    ref, s_ref = R.rwkv6_scan_ref(r, k, v, w, u)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    np.testing.assert_allclose(out, ref, atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# int8 quantize
+# ---------------------------------------------------------------------------
+
+
+def test_quantize_matches_oracle():
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], (100, 256)) * 3
+    noise = jax.random.uniform(ks[1], (100, 256))
+    q, s = ops.quantize_int8(x, noise, interpret=True)
+    qr, sr = R.quantize_int8_ref(x, noise)
+    assert bool(jnp.all(q == qr))
+    np.testing.assert_allclose(s, sr, rtol=1e-6)  # 1-ulp division-order skew
+
+
+def test_quantize_error_bounded_by_scale():
+    x = jax.random.normal(KEY, (64, 128)) * 5
+    noise = jax.random.uniform(jax.random.fold_in(KEY, 1), (64, 128))
+    q, s = ops.quantize_int8(x, noise, interpret=True)
+    err = jnp.abs(ops.dequantize_int8(q, s) - x)
+    assert float(jnp.max(err - s)) <= 1e-6  # |err| <= scale (stochastic floor)
+
+
+def test_quantize_stochastic_unbiased():
+    """E[dequant(quant(x))] == x across noise draws."""
+    x = jnp.full((1, 64), 0.3141, jnp.float32)
+    outs = []
+    for i in range(200):
+        noise = jax.random.uniform(jax.random.fold_in(KEY, i), (1, 64))
+        q, s = ops.quantize_int8(x, noise, interpret=True)
+        outs.append(ops.dequantize_int8(q, s))
+    mean = jnp.mean(jnp.stack(outs))
+    assert abs(float(mean) - 0.3141) < 2e-3

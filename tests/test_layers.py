@@ -1,0 +1,93 @@
+"""Layer-level property tests: attention paths agree, RoPE invariants hold."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as L
+
+KEY = jax.random.PRNGKey(3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    sq=st.integers(4, 48),
+    skv=st.integers(4, 48),
+    chunk=st.integers(3, 17),
+    causal=st.booleans(),
+    seed=st.integers(0, 1000),
+)
+def test_chunked_sdpa_matches_exact(sq, skv, chunk, causal, seed):
+    """The flash-style chunked XLA path == exact sdpa for ANY chunking."""
+    if causal and skv < sq:
+        skv = sq
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, sq, 2, 16))
+    k = jax.random.normal(ks[1], (1, skv, 2, 16))
+    v = jax.random.normal(ks[2], (1, skv, 2, 16))
+    exact = L.sdpa(q, k, v, causal=causal)
+    chunked = L.chunked_sdpa(q, k, v, causal=causal, chunk=chunk)
+    np.testing.assert_allclose(exact, chunked, atol=2e-5, rtol=2e-5)
+
+
+def test_rope_is_relative():
+    """Attention logits depend only on position differences."""
+    ks = jax.random.split(KEY, 2)
+    q = jax.random.normal(ks[0], (1, 8, 1, 32))
+    k = jax.random.normal(ks[1], (1, 8, 1, 32))
+
+    def logits(offset):
+        pos = jnp.arange(8) + offset
+        qr = L.apply_rope(q, pos)
+        kr = L.apply_rope(k, pos)
+        return jnp.einsum("bqhd,bkhd->bqk", qr, kr)
+
+    np.testing.assert_allclose(logits(0), logits(1000), atol=1e-3, rtol=1e-3)
+
+
+def test_mrope_equals_rope_when_streams_equal():
+    """Text tokens (all three M-RoPE streams equal) == standard RoPE."""
+    x = jax.random.normal(KEY, (1, 8, 2, 24))
+    pos = jnp.arange(8)[None]                  # (B, S)
+    pos3 = jnp.broadcast_to(pos[None], (3, 1, 8))
+    a = L.apply_mrope(x, pos3, sections=(4, 4, 4), theta=10000.0)
+    b = L.apply_rope(x, pos[0], theta=10000.0)
+    np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+def test_gqa_repeat_matches_explicit():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 8, 4, 16))
+    k = jax.random.normal(ks[1], (1, 8, 2, 16))
+    v = jax.random.normal(ks[2], (1, 8, 2, 16))
+    gqa = L.sdpa(q, k, v, causal=True)
+    mha = L.sdpa(q, jnp.repeat(k, 2, axis=2), jnp.repeat(v, 2, axis=2),
+                 causal=True)
+    np.testing.assert_allclose(gqa, mha, atol=1e-6)
+
+
+def test_local_window_masks_far_keys():
+    ks = jax.random.split(KEY, 3)
+    S, W = 16, 4
+    q = jax.random.normal(ks[0], (1, S, 1, 8))
+    k = jax.random.normal(ks[1], (1, S, 1, 8))
+    v = jax.random.normal(ks[2], (1, S, 1, 8))
+    # zero out keys outside every window: result must be identical
+    out1 = L.sdpa(q, k, v, causal=True, window=W)
+    k2 = k.at[:, : S - W].set(jax.random.normal(ks[0], (1, S - W, 1, 8)))
+    v2 = v.at[:, : S - W].set(jax.random.normal(ks[1], (1, S - W, 1, 8)))
+    out2 = L.sdpa(q, k2, v2, causal=True, window=W)
+    # positions >= W see only in-window keys, which are unchanged
+    np.testing.assert_allclose(out1[:, S - 1], out2[:, S - 1], atol=1e-6)
+
+
+def test_masked_softmax_rows_fully_masked_are_zero():
+    """window+causal can fully mask early rows; output must be 0, not NaN."""
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 4, 1, 8))
+    k = jax.random.normal(ks[1], (1, 4, 1, 8))
+    v = jax.random.normal(ks[2], (1, 4, 1, 8))
+    out = L.chunked_sdpa(q, k, v, causal=True, window=1, q_offset=0, chunk=2)
+    assert bool(jnp.all(jnp.isfinite(out)))

@@ -1,0 +1,88 @@
+"""Eq. 1 load balancing + privacy placement tests."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import load_balance as lb
+from repro.core import privacy
+
+
+def test_eq1_literal():
+    # paper: dataset_host = dataset_card / batch_card * batch_host
+    assert lb.eq1_dataset_size(3000, 25, 315) == 37800
+
+
+def test_plan_aligns_steps():
+    plan = lb.plan_epoch(
+        {"host": 315, "csd0": 25, "csd1": 25},
+        {"host": 0, "csd0": 500, "csd1": 2000},
+        72000,
+    )
+    assert plan.imbalance_steps() == 0
+    assert plan.steps_per_epoch > 0
+
+
+def test_backfill_remedy():
+    """Worker with little private data gets public backfill (paper remedy 1)."""
+    plan = lb.plan_epoch({"a": 10, "b": 10}, {"a": 1000, "b": 10}, 2000)
+    sa, sb = plan.share_for("a"), plan.share_for("b")
+    assert sb.n_public > sa.n_public or sa.n_private > sb.n_private
+    assert sa.steps == sb.steps
+
+
+def test_duplication_remedy():
+    """When public data runs dry, private data is replayed (paper remedy 2)."""
+    plan = lb.plan_epoch({"a": 10, "b": 10}, {"a": 1000, "b": 100}, 0)
+    sb = plan.share_for("b")
+    assert sb.n_duplicated > 0
+    assert plan.imbalance_steps() == 0
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    batches=st.lists(st.integers(1, 64), min_size=1, max_size=8),
+    privates=st.lists(st.integers(0, 500), min_size=8, max_size=8),
+    n_public=st.integers(0, 10_000),
+)
+def test_plan_properties(batches, privates, n_public):
+    names = [f"w{i}" for i in range(len(batches))]
+    plan = lb.plan_epoch(
+        dict(zip(names, batches)),
+        dict(zip(names, privates[: len(batches)])),
+        n_public,
+    )
+    # P1: all workers finish together
+    assert plan.imbalance_steps() == 0
+    # P2: no worker uses more private than it owns
+    for s in plan.shares:
+        owned = dict(zip(names, privates))[s.worker]
+        assert s.n_private <= owned
+    # P3: public assignments never exceed the pool
+    assert sum(s.n_public for s in plan.shares) <= n_public
+    # P4: shares match steps*batch within one batch
+    for s in plan.shares:
+        assert s.total >= plan.steps_per_epoch * s.batch
+
+
+def test_privacy_placement_never_moves_private():
+    shards = [
+        privacy.Shard("p0", 100, True, "w0"),
+        privacy.Shard("p1", 100, True, "w1"),
+        privacy.Shard("pub", 1000, False),
+    ]
+    m = privacy.place(shards, {"w0": 500, "w1": 200})
+    rep = privacy.leakage_report(m, {s.shard_id: s for s in shards})
+    assert rep["private_samples_moved"] == 0
+
+
+def test_privacy_validate_raises_on_leak():
+    shards = {"p0": privacy.Shard("p0", 10, True, "w0")}
+    bad = privacy.PlacementManifest(
+        assignments=(privacy.Assignment("w1", "p0", 5, True),)
+    )
+    with pytest.raises(PermissionError):
+        bad.validate(shards)
+
+
+def test_private_shard_requires_owner():
+    with pytest.raises(ValueError):
+        privacy.Shard("p0", 10, True, None)

@@ -1,0 +1,123 @@
+"""Integration: the full Stannis pipeline (tune -> plan -> place -> train),
+fault tolerance (restart, node loss), and the data pipeline invariants."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.core.hetero import BatchSchedule
+from repro.core.privacy import Shard
+from repro.core.topology import Fleet, WorkerClass
+from repro.data.pipeline import DataConfig, PrivateShardStore, synth_sequence
+from repro.models.api import get_model
+from repro.optim import adamw
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def _fleet(n_csds=2):
+    return Fleet(classes=(
+        WorkerClass("host", 1, 100.0, 8, max_batch=16, active_power=400.0),
+        WorkerClass("csd", n_csds, 25.0, 2, max_batch=4, active_power=7.0),
+    ))
+
+
+def _shards(n_csds=2):
+    return [
+        Shard(f"priv-csd/{i}", 64, True, f"csd/{i}") for i in range(n_csds)
+    ] + [Shard("public", 4096, False)]
+
+
+def _trainer(tmp_path=None, steps=6, n_csds=2):
+    cfg = smoke_config("deepseek-7b")
+    return Trainer(
+        model=get_model(cfg),
+        optimizer=adamw(),
+        fleet=_fleet(n_csds),
+        data_cfg=DataConfig(vocab=cfg.vocab, seq_len=16),
+        cfg=TrainerConfig(
+            total_steps=steps,
+            checkpoint_dir=str(tmp_path) if tmp_path else None,
+            checkpoint_every=2,
+            async_checkpoint=False,
+        ),
+        shards=_shards(n_csds),
+    ).setup()
+
+
+def test_end_to_end_loss_decreases():
+    tr = _trainer(steps=8)
+    assert tr.plan.imbalance_steps() == 0
+    _, hist = tr.train()
+    assert hist[-1]["loss"] < hist[0]["loss"]
+
+
+def test_restart_resumes_from_checkpoint(tmp_path):
+    tr = _trainer(tmp_path, steps=4)
+    tr.train()
+    assert tr.plan is not None
+    # second trainer resumes: runs only the remaining steps
+    tr2 = _trainer(tmp_path, steps=6)
+    _, hist = tr2.train()
+    assert len(hist) == 2  # resumed at step 4 of 6
+
+
+def test_drop_workers_replans():
+    tr = _trainer(steps=2, n_csds=3)
+    n_groups = tr.schedule.n_groups
+    tr.drop_workers(["csd/1"])
+    assert tr.schedule.n_groups == n_groups - 1
+    assert tr.plan.imbalance_steps() == 0
+    # the dead worker's private shard is gone — nobody else may read it
+    assert all(s.owner != "csd/1" for s in tr.shards if s.private)
+    _, hist = tr.train(steps=2)
+    assert np.isfinite(hist[-1]["loss"])
+
+
+def test_retune_keeps_shapes():
+    tr = _trainer(steps=2)
+    shape_before = tr.schedule.global_rows
+    tr.retune()
+    assert tr.schedule.global_rows == shape_before  # no recompilation
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_synth_deterministic_across_processes():
+    cfg = DataConfig(vocab=1000, seq_len=32, seed=5)
+    a = synth_sequence(cfg, "shard-x", 17)
+    b = synth_sequence(cfg, "shard-x", 17)
+    np.testing.assert_array_equal(a, b)
+    c = synth_sequence(cfg, "shard-y", 17)
+    assert not np.array_equal(a, c)
+
+
+def test_private_store_enforces_ownership():
+    cfg = DataConfig(vocab=100, seq_len=8)
+    shards = [Shard("p", 10, True, "w0"), Shard("pub", 10, False)]
+    s0 = PrivateShardStore("w0", shards, cfg)
+    s1 = PrivateShardStore("w1", shards, cfg)
+    s0.sample("p", 0)           # owner: fine
+    s1.sample("pub", 0)         # public: fine
+    with pytest.raises(PermissionError):
+        s1.sample("p", 0)       # private, non-owner: refused
+
+
+def test_dataset_layout_and_masks():
+    tr = _trainer(steps=1)
+    b = tr.dataset.next_batch()
+    R = tr.schedule.global_rows
+    assert b["tokens"].shape == (R, 16)
+    assert b["loss_mask"].shape == (R, 16)
+    # mask matches the schedule exactly
+    np.testing.assert_array_equal(
+        b["loss_mask"][:, 0], tr.schedule.row_mask()
+    )
+    # invalid rows carry zero tokens (never sampled)
+    dead = b["tokens"][b["loss_mask"][:, 0] == 0]
+    assert (dead == 0).all()

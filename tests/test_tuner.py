@@ -1,0 +1,78 @@
+"""Algorithm 1 (tuner) unit + property tests."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topology, tuner
+
+
+def test_paper_fleet_margins():
+    """Every Table-I network tunes to the paper's ~20% sync margin."""
+    for net in ("mobilenetv2", "nasnet", "inceptionv3", "squeezenet"):
+        f = topology.paper_fleet(24, net)
+        r = tuner.tune(f, max_iters=128)
+        th, tn = r.step_times["host"], r.step_times["newport"]
+        margin = (th - tn) / tn
+        assert 0.15 <= margin <= 0.30, (net, margin)
+
+
+def test_nasnet_matches_table1_exactly():
+    f = topology.paper_fleet(24, "nasnet")
+    r = tuner.tune(f, max_iters=128)
+    assert r.batches["host"] == 325  # paper Table I
+
+
+def test_slowest_class_anchors():
+    f = topology.paper_fleet(4, "mobilenetv2")
+    r = tuner.tune(f)
+    assert r.reference_class == "newport"
+    # the slow class's batch never exceeds its DRAM cap
+    assert r.batches["newport"] <= f.by_name("newport").max_batch
+
+
+def test_respects_max_batch():
+    host = topology.WorkerClass("host", 1, 100.0, 8, max_batch=32,
+                                active_power=100.0)
+    csd = topology.WorkerClass("csd", 2, 1.0, 4, max_batch=8, active_power=5.0)
+    r = tuner.tune(topology.Fleet((host, csd)))
+    assert r.batches["host"] <= 32
+    assert r.batches["csd"] <= 8
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    ratio=st.floats(min_value=1.5, max_value=200.0),
+    E=st.floats(min_value=2.0, max_value=10.0),
+    C=st.floats(min_value=2.0, max_value=50.0),
+)
+def test_margin_property(ratio, E, C):
+    """For ANY throughput ratio and (C, E), the tuned fast class lands within
+    the [0, 2/E] band around the target margin (discreteness tolerance),
+    unless capped by max_batch."""
+    fast = topology.WorkerClass("fast", 1, ratio, 4, max_batch=10 ** 6,
+                                active_power=100.0)
+    slow = topology.WorkerClass("slow", 1, 1.0, 4, max_batch=64,
+                                active_power=5.0)
+    r = tuner.tune(topology.Fleet((fast, slow)), C=C, E=E, max_iters=500)
+    t_f, t_s = r.step_times["fast"], r.step_times["slow"]
+    margin = (t_f - t_s) / t_s
+    assert margin >= 1.0 / E - 1e-6, (margin, 1 / E)
+    assert margin <= 2.5 / E + 0.05, (margin, 1 / E)
+
+
+def test_drift_monitor_triggers_after_patience():
+    m = tuner.DriftMonitor(margin=0.2, patience=3, alpha=1.0)
+    assert not m.update({"a": 1.0, "b": 1.0})
+    assert not m.update({"a": 1.0, "b": 2.0})   # breach 1
+    assert not m.update({"a": 1.0, "b": 2.0})   # breach 2
+    assert m.update({"a": 1.0, "b": 2.0})       # breach 3 -> retune
+    # counter resets after firing
+    assert not m.update({"a": 1.0, "b": 2.0})
+
+
+def test_drift_monitor_recovers():
+    m = tuner.DriftMonitor(margin=0.2, patience=2, alpha=1.0)
+    m.update({"a": 1.0, "b": 2.0})
+    assert not m.update({"a": 1.0, "b": 1.0})   # spread healed: counter resets
+    assert not m.update({"a": 1.0, "b": 2.0})
