@@ -9,6 +9,7 @@ from __future__ import annotations
 
 from typing import Dict, List
 
+from repro.api import FleetSpec
 from repro.core import topology, tuner
 
 NETS = {
@@ -26,7 +27,7 @@ def run(verbose: bool = True) -> Dict[str, List[float]]:
     for net, n_params in NETS.items():
         pts = []
         for n in CSD_COUNTS:
-            fleet = topology.paper_fleet(max(n, 1), net)
+            fleet = FleetSpec.paper(max(n, 1), net).build()
             r = tuner.tune(fleet, max_iters=128)
             batches = dict(r.batches)
             if n == 0:

@@ -1,4 +1,6 @@
-"""Benchmark harness: one module per paper table/figure.
+"""Benchmark harness: one module per paper table/figure, plus the
+Session-API end-to-end smoke.  All suites go through ``repro.api``
+(``FleetSpec`` presets / ``Session``) — no hand-rolled fleet wiring here.
 
   PYTHONPATH=src python -m benchmarks.run            # all
   PYTHONPATH=src python -m benchmarks.run table1     # one
@@ -12,8 +14,8 @@ import time
 def main(argv=None) -> int:
     argv = argv if argv is not None else sys.argv[1:]
     from benchmarks import (
-        accuracy_parity, fig6_throughput, fig7_speedup, table1_tuning,
-        table2_energy,
+        accuracy_parity, fig6_throughput, fig7_speedup, session_smoke,
+        table1_tuning, table2_energy,
     )
 
     suites = {
@@ -22,6 +24,7 @@ def main(argv=None) -> int:
         "fig7": lambda: (fig7_speedup.run(), print(fig7_speedup.validate())),
         "table2": lambda: (table2_energy.run(), print(table2_energy.validate())),
         "accuracy": lambda: print(accuracy_parity.run()),
+        "session": lambda: (session_smoke.run(), print(session_smoke.validate())),
     }
     wanted = argv or list(suites)
     rc = 0

@@ -15,7 +15,8 @@ itself notes Newport speed is flat for bs > 16).
 """
 from __future__ import annotations
 
-from repro.core import topology, tuner
+from repro.api import FleetSpec
+from repro.core import tuner
 
 PAPER = {
     "mobilenetv2": (315, 25, 31.05, 3.08),
@@ -28,7 +29,7 @@ PAPER = {
 def run(verbose: bool = True) -> dict:
     rows = {}
     for net, (p_host, p_csd, s_host, s_csd) in PAPER.items():
-        fleet = topology.paper_fleet(24, net)
+        fleet = FleetSpec.paper(24, net).build()
         r = tuner.tune(fleet, max_iters=128)
         th, tn = r.step_times["host"], r.step_times["newport"]
         margin = (th - tn) / tn

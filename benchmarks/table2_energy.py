@@ -23,6 +23,7 @@ from __future__ import annotations
 
 from typing import Dict
 
+from repro.api import FleetSpec
 from repro.core import topology, tuner
 
 PAPER_ENERGY = {0: 13.10, 4: 8.30, 8: 6.84, 16: 5.05, 24: 4.02}
@@ -48,7 +49,7 @@ def rack_power(n_active_csds: int) -> float:
 def run(verbose: bool = True) -> Dict[int, Dict[str, float]]:
     rows: Dict[int, Dict[str, float]] = {}
     for n in CSD_COUNTS:
-        fleet = topology.paper_fleet(max(n, 1), "mobilenetv2")
+        fleet = FleetSpec.paper(max(n, 1), "mobilenetv2").build()
         r = tuner.tune(fleet, max_iters=128)
         batches = dict(r.batches)
         if n == 0:

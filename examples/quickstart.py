@@ -1,54 +1,47 @@
-"""Quickstart: the Stannis pipeline end to end on a reduced model, in ~40 lines.
+"""Quickstart: the Stannis pipeline end to end through the Session API.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import jax
-
+from repro.api import FleetSpec, Session, SessionConfig
 from repro.configs import smoke_config
-from repro.core.privacy import Shard
-from repro.core.topology import Fleet, WorkerClass
 from repro.data.pipeline import DataConfig
 from repro.models.api import get_model
 from repro.optim import adamw
-from repro.train.trainer import Trainer, TrainerConfig
 
 # 1. A heterogeneous fleet: one fast "host" class + two slow "CSD"-class
 #    workers (the paper's Newport role, scaled to this machine).
-fleet = Fleet(classes=(
-    WorkerClass("host", count=1, peak_throughput=100.0, saturation_batch=8,
-                max_batch=16, active_power=400.0),
-    WorkerClass("csd", count=2, peak_throughput=25.0, saturation_batch=2,
-                max_batch=4, active_power=7.0),
-))
+spec = FleetSpec.demo(n_csds=2)
 
 # 2. Data: private shards pinned to their owners + a public pool.
-shards = [
-    Shard("private-csd/0", 64, private=True, owner="csd/0"),
-    Shard("private-csd/1", 64, private=True, owner="csd/1"),
-    Shard("public", 4096, private=False),
-]
+shards = spec.shards(private_per_worker={"csd": 64}, public=4096)
 
 # 3. Model: any of the ten assigned architectures (reduced dims here).
 cfg = smoke_config("deepseek-7b")
 model = get_model(cfg)
 
-trainer = Trainer(
+session = Session(
     model=model,
     optimizer=adamw(),
-    fleet=fleet,
-    data_cfg=DataConfig(vocab=cfg.vocab, seq_len=32),
-    cfg=TrainerConfig(total_steps=20),
+    fleet=spec,
+    data=DataConfig(vocab=cfg.vocab, seq_len=32),
     shards=shards,
-).setup()
+    config=SessionConfig(total_steps=20),
+)
 
-print("Algorithm-1 tuned batches :", trainer.tune_result.batches)
-print("Eq.-1 steps per epoch     :", trainer.plan.steps_per_epoch,
-      f"(imbalance {trainer.plan.imbalance_steps()} steps)")
-print("group schedule            :", trainer.schedule.group_batches,
-      f"pad {trainer.schedule.pad_fraction:.0%}")
+# Each stage is an explicit, cached, inspectable artifact.
+tune_plan = session.tune()      # Algorithm 1
+epoch = session.plan()          # Eq. 1
+session.place()                 # privacy placement
 
-params, history = trainer.train(
-    on_metrics=lambda i, m: print(f"  step {i:3d}  loss {m['loss']:.4f}")
+print("Algorithm-1 tuned batches :", tune_plan.batches)
+print("Eq.-1 steps per epoch     :", epoch.steps_per_epoch,
+      f"(imbalance {epoch.imbalance_steps()} steps)")
+print("group schedule            :", tune_plan.schedule.group_batches,
+      f"pad {tune_plan.schedule.pad_fraction:.0%}")
+
+session.callbacks.on_step(
+    lambda i, m: print(f"  step {i:3d}  loss {m['loss']:.4f}")
     if i % 5 == 0 else None
 )
-print(f"loss {history[0]['loss']:.4f} -> {history[-1]['loss']:.4f}")
+report = session.run()
+print(f"loss {report.history[0]['loss']:.4f} -> {report.final_loss:.4f}")

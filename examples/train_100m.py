@@ -1,6 +1,6 @@
 """End-to-end driver: train a ~100M-param dense LM for a few hundred steps on
 CPU with the full Stannis pipeline (tune -> balance -> place -> train), with
-checkpoint/restart fault tolerance.
+checkpoint/restart fault tolerance — all through the Session API.
 
     PYTHONPATH=src python examples/train_100m.py --steps 300
 
@@ -9,17 +9,12 @@ seconds per step at the default seq 64 (use --seq 128 --steps 300 for the
 full run on a real machine).
 """
 import argparse
-import time
 
-import jax
-
-from repro.core.privacy import Shard
-from repro.core.topology import Fleet, WorkerClass
+from repro.api import FleetSpec, Session, SessionConfig
 from repro.data.pipeline import DataConfig
 from repro.models.api import get_model
 from repro.models.config import ModelConfig
 from repro.optim import adamw
-from repro.train.trainer import Trainer, TrainerConfig
 
 
 def main():
@@ -38,21 +33,17 @@ def main():
     model = get_model(cfg)
     print(f"params: {cfg.param_count():,}")
 
-    fleet = Fleet(classes=(
-        WorkerClass("host", 1, 50.0, 8, max_batch=8, active_power=400.0),
-        WorkerClass("csd", 2, 12.0, 2, max_batch=2, active_power=7.0),
-    ))
-    shards = [
-        Shard("private-csd/0", 512, True, "csd/0"),
-        Shard("private-csd/1", 512, True, "csd/1"),
-        Shard("public", 1 << 20, False),
-    ]
-    trainer = Trainer(
+    spec = FleetSpec.demo(
+        n_csds=2, host_tput=50.0, csd_tput=12.0,
+        host_max_batch=8, csd_max_batch=2,
+    )
+    session = Session(
         model=model,
         optimizer=adamw(weight_decay=0.01),
-        fleet=fleet,
-        data_cfg=DataConfig(vocab=cfg.vocab, seq_len=args.seq),
-        cfg=TrainerConfig(
+        fleet=spec,
+        data=DataConfig(vocab=cfg.vocab, seq_len=args.seq),
+        shards=spec.shards(private_per_worker={"csd": 512}, public=1 << 20),
+        config=SessionConfig(
             total_steps=args.steps,
             base_lr=3e-4,
             warmup_steps=30,
@@ -60,22 +51,24 @@ def main():
             checkpoint_every=100,
             async_checkpoint=True,
         ),
-        shards=shards,
-    ).setup()
+    )
 
-    print("tuned:", trainer.tune_result.batches,
-          "| schedule:", trainer.schedule.group_batches,
-          "| epoch:", trainer.plan.steps_per_epoch, "steps")
-    t0 = time.time()
-    _, hist = trainer.train(
-        on_metrics=lambda i, m: print(
+    tune_plan = session.tune()
+    print("tuned:", tune_plan.batches,
+          "| schedule:", tune_plan.schedule.group_batches,
+          "| epoch:", session.plan().steps_per_epoch, "steps")
+
+    session.callbacks.on_step(
+        lambda i, m: print(
             f"  step {i:4d}  loss {m['loss']:.4f}  lr {m['lr']:.2e}  "
             f"{m['step_time']*1e3:.0f} ms"
         ) if i % 25 == 0 else None
     )
-    dt = time.time() - t0
-    tok_s = sum(h["tokens"] for h in hist) / dt
-    print(f"done: {len(hist)} steps in {dt:.0f}s ({tok_s:,.0f} tok/s); "
+    report = session.run()
+    hist = report.history
+    tok_s = sum(h["tokens"] for h in hist) / max(report.wall_time, 1e-9)
+    print(f"done: {report.steps_run} steps in {report.wall_time:.0f}s "
+          f"({tok_s:,.0f} tok/s); "
           f"loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}")
 
 

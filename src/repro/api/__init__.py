@@ -1,0 +1,43 @@
+"""`repro.api` — the public, staged entry point for the Stannis pipeline.
+
+    from repro.api import Session, SessionConfig, FleetSpec
+
+    spec = FleetSpec.demo(n_csds=2)
+    session = Session(
+        model=model, optimizer=adamw(), fleet=spec,
+        data=DataConfig(vocab=cfg.vocab, seq_len=32),
+        shards=spec.shards(private_per_worker={"csd": 64}, public=4096),
+        config=SessionConfig(total_steps=20),
+    )
+    report = session.run()          # tune -> plan -> place -> compile -> train
+
+See :mod:`repro.api.session` for the stage-by-stage contract and
+:mod:`repro.api.events` for the elastic-event model.
+"""
+from repro.api.artifacts import (
+    CompiledStep, ReplanResult, TrainReport, TunePlan,
+)
+from repro.api.callbacks import CallbackRegistry
+from repro.api.events import (
+    DriftDetected, FleetEvent, WorkerJoined, WorkerLost,
+)
+from repro.api.fleet import FleetSpec
+from repro.api.serving import GenerateResult, ServeSession
+from repro.api.session import Session, SessionConfig
+
+__all__ = [
+    "CallbackRegistry",
+    "CompiledStep",
+    "DriftDetected",
+    "FleetEvent",
+    "FleetSpec",
+    "GenerateResult",
+    "ReplanResult",
+    "ServeSession",
+    "Session",
+    "SessionConfig",
+    "TrainReport",
+    "TunePlan",
+    "WorkerJoined",
+    "WorkerLost",
+]

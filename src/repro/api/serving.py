@@ -1,0 +1,94 @@
+"""`ServeSession`: the inference-side counterpart of :class:`~repro.api.Session`.
+
+Wraps prefill + KV-cache decode behind one object so serving drivers stop
+hand-rolling the per-family control flow (recurrent archs feed the prompt
+token-by-token with O(1) state; attention archs run a batched prefill).
+
+    serve = ServeSession(model=model, params=params)
+    out = serve.generate(prompt_tokens, max_new_tokens=16)
+    print(out.tokens, out.decode_tok_s)
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import Model
+from repro.train.steps import make_serve_step
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class GenerateResult:
+    tokens: jax.Array            # (B, 1 + max_new_tokens) generated ids
+    decode_time: float           # seconds spent in the decode loop
+    decode_tok_s: float          # aggregate decode throughput
+    ms_per_step: float
+
+
+class ServeSession:
+    """Compiled prefill/decode pair with a family-aware generate loop."""
+
+    def __init__(self, *, model: Model, params: PyTree):
+        self.model = model
+        self.params = params
+        self._serve = jax.jit(make_serve_step(model))
+        self._prefill = None     # (cache_len, jitted fn), built lazily
+
+    @property
+    def recurrent(self) -> bool:
+        return self.model.cfg.family in ("rglru", "rwkv6")
+
+    def _prefill_recurrent(self, prompt: jax.Array, cache_len: int):
+        B, P = prompt.shape
+        cache = self.model.init_cache(B, cache_len)
+        nxt = prompt[:, 0:1]
+        for t in range(P):
+            pos = jnp.full((B,), t, jnp.int32)
+            nxt, _, cache = self._serve(
+                self.params, prompt[:, t:t + 1], cache, pos
+            )
+        return nxt, cache
+
+    def _prefill_attention(self, prompt: jax.Array, cache_len: int):
+        if self._prefill is None or self._prefill[0] != cache_len:
+            self._prefill = (cache_len, jax.jit(
+                lambda p, t: self.model.prefill(p, t, cache_len)
+            ))
+        logits, cache = self._prefill[1](self.params, prompt)
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return tok, cache
+
+    def generate(
+        self,
+        prompt: jax.Array,                 # (B, P) int32 token ids
+        *,
+        max_new_tokens: int = 16,
+        cache_len: Optional[int] = None,
+    ) -> GenerateResult:
+        B, P = prompt.shape
+        cache_len = cache_len or (P + max_new_tokens + 1)
+        if self.recurrent:
+            tok, cache = self._prefill_recurrent(prompt, cache_len)
+        else:
+            tok, cache = self._prefill_attention(prompt, cache_len)
+
+        out = [tok]
+        t0 = time.time()
+        for t in range(max_new_tokens):
+            pos = jnp.full((B,), P + t, jnp.int32)
+            tok, _, cache = self._serve(self.params, tok, cache, pos)
+            out.append(tok)
+        jax.block_until_ready(tok)
+        dt = max(time.time() - t0, 1e-9)
+        return GenerateResult(
+            tokens=jnp.concatenate(out, axis=1),
+            decode_time=dt,
+            decode_tok_s=max_new_tokens * B / dt,
+            ms_per_step=dt / max(1, max_new_tokens) * 1e3,
+        )

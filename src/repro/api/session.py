@@ -1,0 +1,536 @@
+"""`Session`: the staged public entry point for the whole Stannis pipeline.
+
+The paper's pipeline is tune -> balance -> place -> train (Algorithm 1,
+Eq. 1, privacy placement).  The seed ``Trainer`` fused all four into one
+opaque ``setup()``; a ``Session`` decomposes them into explicit, frozen,
+cached, individually overridable stage artifacts:
+
+    session = Session(model=model, optimizer=adamw(),
+                      fleet=FleetSpec.demo(2), data=DataConfig(...),
+                      shards=spec.shards(...), config=SessionConfig(...))
+    tune_plan = session.tune()      # Algorithm 1 -> TunePlan
+    epoch     = session.plan()      # Eq. 1       -> EpochPlan
+    manifest  = session.place()     # privacy     -> PlacementManifest
+    step      = session.compile()   # jitted SPMD -> CompiledStep
+    report    = session.run()       # training    -> TrainReport
+
+Stages are lazy and memoized: calling ``run()`` directly executes the whole
+chain; calling a stage twice returns the SAME artifact object.  A stage can
+be overridden (``session.override("tune", my_plan)``), which invalidates
+everything downstream of it — that is the hook online re-tuners and elastic
+schedulers build on.
+
+All mid-run fleet changes go through ONE replanning path,
+:meth:`Session.apply`:
+
+    session.apply(WorkerLost(["csd/1"]))   # paper's backfill remedy
+    session.apply(WorkerJoined("csd", 2))  # elastic growth
+    session.apply(DriftDetected())         # online re-tune, zero recompile
+
+``apply`` preserves the pinned row capacity across events, so a drift
+re-tune keeps tensor shapes bit-identical (the compiled step is reused; the
+``compile_count`` probe proves it), and a node loss keeps ``max_local``
+stable so only the group dimension changes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.artifacts import CompiledStep, ReplanResult, TrainReport, TunePlan
+from repro.api.callbacks import CallbackRegistry
+from repro.api.events import DriftDetected, FleetEvent, WorkerJoined, WorkerLost
+from repro.api.fleet import FleetSpec
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.hetero import BatchSchedule, schedule_from_tune
+from repro.core.load_balance import EpochPlan, plan_epoch
+from repro.core.privacy import PlacementManifest, Shard, place
+from repro.core.topology import Fleet
+from repro.core.tuner import BenchmarkFn, DriftMonitor, tune
+from repro.data.pipeline import (
+    DataConfig, StannisDataset, make_stannis_dataset, manifest_sources,
+)
+from repro.models.api import Model
+from repro.optim.optimizers import Optimizer
+from repro.optim.schedules import goyal_schedule
+from repro.train.steps import make_train_step
+
+PyTree = Any
+
+# stage dependency graph: invalidating a stage clears it plus everything
+# that derives from it.  Note "compile" depends only on the tune schedule
+# (shapes + lr anchor) — a plan/place override must not throw away the
+# jitted step.
+_STAGES = ("tune", "plan", "place", "dataset", "compile")
+_DOWNSTREAM = {
+    "tune": ("plan", "place", "dataset", "compile"),
+    "plan": ("place", "dataset"),
+    "place": ("dataset",),
+    "dataset": (),
+    "compile": (),
+}
+
+
+@dataclasses.dataclass
+class SessionConfig:
+    """Run-level knobs (training length, LR rule, checkpointing, drift).
+
+    Mutable by design (unlike the stage artifacts): callers tweak e.g.
+    ``total_steps`` or ``retune_margin`` between runs of the same session.
+    """
+
+    total_steps: int = 100
+    base_lr: float = 1e-3
+    base_batch: int = 256
+    warmup_steps: int = 20
+    aux_weight: float = 0.01
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 50
+    keep_checkpoints: int = 3
+    async_checkpoint: bool = True
+    retune_margin: float = 0.2       # DriftMonitor threshold = tuner 1/E
+    retune_patience: int = 10
+    log_every: int = 10
+    seed: int = 0
+
+
+class Session:
+    """Staged pipeline: tune -> plan -> place -> compile -> run, re-enterable."""
+
+    def __init__(
+        self,
+        *,
+        model: Model,
+        optimizer: Optimizer,
+        fleet: Union[Fleet, FleetSpec],
+        data: DataConfig,
+        shards: Sequence[Shard],
+        config: Optional[SessionConfig] = None,
+        benchmark: Optional[BenchmarkFn] = None,
+        callbacks: Optional[CallbackRegistry] = None,
+    ):
+        self.model = model
+        self.optimizer = optimizer
+        self.fleet: Fleet = fleet.build() if isinstance(fleet, FleetSpec) else fleet
+        self.data = data
+        self._shards: List[Shard] = list(shards)
+        self.config = config or SessionConfig()
+        self.benchmark = benchmark
+        self.callbacks = callbacks or CallbackRegistry()
+        self._artifacts: Dict[str, Any] = {}
+        self._compile_count = 0
+        # WorkerClass templates survive a fully-dead class leaving the fleet,
+        # so a replacement node can still rejoin under the same class name
+        self._class_templates: Dict[str, Any] = {
+            c.name: c for c in self.fleet.classes
+        }
+        # canonical live membership: survives stage rebuilds (tune(force=True)
+        # must not resurrect dead workers from bare class counts)
+        self._group_workers: Optional[Tuple[str, ...]] = None
+        # per-class high-water mark of worker indices ever handed out, so a
+        # joiner can never be relabeled as a dead worker
+        self._next_index: Dict[str, int] = {}
+
+    def _note_labels(self, workers: Sequence[str]) -> None:
+        for w in workers:
+            cls, idx = w.rsplit("/", 1)
+            self._next_index[cls] = max(
+                self._next_index.get(cls, 0), int(idx) + 1
+            )
+
+    # -- introspection -----------------------------------------------------
+
+    @property
+    def shards(self) -> Tuple[Shard, ...]:
+        """Live shard set (shrinks when an owner dies — privacy constraint)."""
+        return tuple(self._shards)
+
+    @property
+    def compile_count(self) -> int:
+        """How many times a CompiledStep was built (the no-recompile probe)."""
+        return self._compile_count
+
+    def cached(self, stage: str) -> bool:
+        return stage in self._artifacts
+
+    def override(self, stage: str, artifact: Any) -> None:
+        """Install a caller-supplied artifact for ``stage``; downstream stages
+        are invalidated and will rebuild against it on next access."""
+        if stage not in _STAGES:
+            raise KeyError(f"unknown stage {stage!r}; stages are {_STAGES}")
+        self._invalidate(stage)
+        self._artifacts[stage] = artifact
+        if stage == "tune":
+            # an externally supplied TunePlan defines the live membership
+            self._group_workers = tuple(artifact.group_workers)
+            self._note_labels(artifact.group_workers)
+
+    def _invalidate(self, from_stage: str) -> None:
+        self._artifacts.pop(from_stage, None)
+        for s in _DOWNSTREAM[from_stage]:
+            self._artifacts.pop(s, None)
+
+    # -- stage 1: Algorithm 1 ---------------------------------------------
+
+    def tune(self, *, force: bool = False) -> TunePlan:
+        prev = self._artifacts.get("tune")
+        prev_compiled = self._artifacts.get("compile")
+        if force:
+            self._invalidate("tune")
+        if "tune" not in self._artifacts:
+            result = tune(self.fleet, self.benchmark)
+            if self._group_workers is None:
+                # first tune: physical workers are enumerated from class counts
+                class_counts = {c.name: c.count for c in self.fleet.classes}
+                schedule, workers = schedule_from_tune(
+                    result.batches, class_counts
+                )
+                self._group_workers = tuple(workers)
+            else:
+                # rebuild (e.g. force=True after elastic events): keep the
+                # live membership, map per-class batches onto it
+                workers = self._group_workers
+                new_batches = tuple(
+                    result.batches[w.rsplit("/", 1)[0]] for w in workers
+                )
+                if prev is not None and prev.group_workers == workers:
+                    # preserve the pinned capacity (and round_to): a re-tune
+                    # that fits under it keeps the compiled shapes
+                    schedule = prev.schedule.with_batches(new_batches)
+                else:
+                    schedule = BatchSchedule(new_batches)
+            self._note_labels(workers)
+            self._artifacts["tune"] = TunePlan(
+                result=result, schedule=schedule, group_workers=tuple(workers)
+            )
+            if (
+                prev_compiled is not None
+                and prev_compiled.global_rows == schedule.global_rows
+            ):
+                self._artifacts["compile"] = prev_compiled
+        return self._artifacts["tune"]
+
+    # -- stage 2: Eq. 1 epoch balancing -----------------------------------
+
+    def plan(self, *, force: bool = False) -> EpochPlan:
+        if force:
+            self._invalidate("plan")
+        if "plan" not in self._artifacts:
+            tp = self.tune()
+            batches = dict(zip(tp.group_workers, tp.schedule.group_batches))
+            private_sizes = {w: 0 for w in tp.group_workers}
+            n_public = 0
+            for s in self._shards:
+                if s.private:
+                    private_sizes[s.owner] = (
+                        private_sizes.get(s.owner, 0) + s.n_samples
+                    )
+                else:
+                    n_public += s.n_samples
+            self._artifacts["plan"] = plan_epoch(batches, private_sizes, n_public)
+        return self._artifacts["plan"]
+
+    # -- stage 3: privacy placement ---------------------------------------
+
+    def place(self, *, force: bool = False) -> PlacementManifest:
+        if force:
+            self._invalidate("place")
+        if "place" not in self._artifacts:
+            epoch = self.plan()
+            targets = {sh.worker: sh.total for sh in epoch.shares}
+            self._artifacts["place"] = place(list(self._shards), targets)
+        return self._artifacts["place"]
+
+    # -- stage 3b: data pipeline (internal, derived from plan + place) -----
+
+    @property
+    def dataset(self) -> StannisDataset:
+        if "dataset" not in self._artifacts:
+            tp = self.tune()
+            self._artifacts["dataset"] = make_stannis_dataset(
+                self.data, tp.schedule, list(tp.group_workers), self.plan(),
+                self.place(), self._shards,
+            )
+        return self._artifacts["dataset"]
+
+    # -- stage 4: the jitted SPMD step ------------------------------------
+
+    def _config_key(self) -> Tuple:
+        """The SessionConfig values baked into the compiled step."""
+        cfg = self.config
+        return (cfg.base_lr, cfg.base_batch, cfg.warmup_steps,
+                cfg.total_steps, cfg.aux_weight)
+
+    def compile(self, *, force: bool = False) -> CompiledStep:
+        if force:
+            self._invalidate("compile")
+        cached = self._artifacts.get("compile")
+        if cached is not None and cached.config_key != self._config_key():
+            # config edits between runs must take effect (the step bakes in
+            # the lr schedule); drift re-tunes deliberately do NOT count —
+            # valid_rows stays anchored at build time, as in the seed
+            self._invalidate("compile")
+        if "compile" not in self._artifacts:
+            tp = self.tune()
+            sched = goyal_schedule(
+                self.config.base_lr,
+                tp.schedule.valid_rows,
+                base_batch=self.config.base_batch,
+                warmup_steps=self.config.warmup_steps,
+                total_steps=self.config.total_steps,
+            )
+            step = make_train_step(
+                self.model, self.optimizer, sched,
+                aux_weight=self.config.aux_weight,
+            )
+            self._compile_count += 1
+            self._artifacts["compile"] = CompiledStep(
+                step_fn=jax.jit(step, donate_argnums=(0, 1)),
+                global_rows=tp.schedule.global_rows,
+                seq_len=self.data.seq_len,
+                valid_rows=tp.schedule.valid_rows,
+                build_id=self._compile_count,
+                config_key=self._config_key(),
+            )
+        return self._artifacts["compile"]
+
+    # -- stage 5: training ------------------------------------------------
+
+    def run(
+        self,
+        params: Optional[PyTree] = None,
+        *,
+        opt_state: Optional[PyTree] = None,
+        steps: Optional[int] = None,
+    ) -> TrainReport:
+        """Train.  Pass a prior report's ``params`` AND ``opt_state`` to
+        continue after an elastic event — the optimizer's moments and the
+        lr-schedule step counter live in ``opt_state``, so omitting it
+        restarts warmup from step 0."""
+        cfg = self.config
+        steps = steps or cfg.total_steps
+        key = jax.random.PRNGKey(cfg.seed)
+        if params is None:
+            params, _ = self.model.init_params(key=key)
+        if opt_state is None:
+            opt_state = self.optimizer.init(params)
+
+        ckpt = (
+            CheckpointManager(cfg.checkpoint_dir, keep=cfg.keep_checkpoints)
+            if cfg.checkpoint_dir else None
+        )
+        start_step = 0
+        if ckpt is not None and ckpt.latest_step() is not None:
+            # restart-after-failure: resume newest valid checkpoint
+            state, meta = ckpt.restore({"params": params, "opt": opt_state})
+            params, opt_state = state["params"], state["opt"]
+            start_step = int(meta.get("step", ckpt.latest_step()))
+
+        compiled = self.compile()
+        dataset = self.dataset
+        monitor = DriftMonitor(
+            margin=cfg.retune_margin, patience=cfg.retune_patience
+        )
+        history: List[Dict[str, float]] = []
+        t0 = time.perf_counter()
+
+        for i in range(start_step, steps):
+            batch_np = dataset.next_batch()
+            batch = {
+                "tokens": jnp.asarray(batch_np["tokens"]),
+                "labels": jnp.asarray(batch_np["labels"]),
+                "loss_mask": jnp.asarray(batch_np["loss_mask"]),
+            }
+            ts = time.perf_counter()
+            params, opt_state, metrics = compiled.step_fn(params, opt_state, batch)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            metrics["step_time"] = time.perf_counter() - ts
+            history.append(metrics)
+            self.callbacks.emit_step(i, metrics)
+
+            # straggler watch: feed per-class analytic times perturbed by the
+            # observed wall time (single-host stand-in for per-worker probes)
+            tp = self.tune()
+            class_times = {
+                c.name: self.fleet.by_name(c.name).step_time(
+                    tp.result.batches[c.name]
+                )
+                for c in self.fleet.classes
+                if c.name in tp.result.batches
+            }
+            if monitor.update(class_times):
+                self.apply(DriftDetected(source="monitor"))
+                compiled = self.compile()   # same object unless shapes grew
+                dataset = self.dataset
+
+            if ckpt is not None and (i + 1) % cfg.checkpoint_every == 0:
+                ckpt.save(
+                    i + 1, {"params": params, "opt": opt_state},
+                    metadata={
+                        "step": i + 1,
+                        "schedule": list(self.tune().schedule.group_batches),
+                    },
+                    async_=cfg.async_checkpoint,
+                )
+                self.callbacks.emit_checkpoint(i + 1, cfg.checkpoint_dir)
+        if ckpt is not None:
+            ckpt.wait()
+        return TrainReport(
+            params=params,
+            opt_state=opt_state,
+            history=tuple(history),
+            steps_run=len(history),
+            start_step=start_step,
+            compile_count=self._compile_count,
+            wall_time=time.perf_counter() - t0,
+        )
+
+    # -- the ONE elastic replanning path ----------------------------------
+
+    def apply(self, event: FleetEvent) -> ReplanResult:
+        """Route any elastic fleet event through one replanning code path.
+
+        The pinned row ``capacity`` always survives the event, so shapes only
+        change when the group COUNT changes (node loss/join) — never on a
+        drift re-tune.
+        """
+        old = self.tune()
+        dropped: Tuple[str, ...] = ()
+
+        if isinstance(event, DriftDetected):
+            # membership never changes on drift: re-tune per-CLASS batches
+            # and map them onto the CURRENT group workers (which may already
+            # reflect earlier losses/joins)
+            result = tune(self.fleet, self.benchmark)
+            new_batches = tuple(
+                result.batches[w.rsplit("/", 1)[0]] for w in old.group_workers
+            )
+            # capacity-pinned: same shapes => the compiled step survives
+            schedule = old.schedule.with_batches(new_batches)
+            new = TunePlan(result=result, schedule=schedule,
+                           group_workers=old.group_workers)
+
+        elif isinstance(event, WorkerLost):
+            dead = set(event.workers)
+            missing = dead - set(old.group_workers)
+            if missing:
+                raise KeyError(f"unknown workers {sorted(missing)}")
+            keep = [
+                (w, b) for w, b in zip(old.group_workers,
+                                       old.schedule.group_batches)
+                if w not in dead
+            ]
+            if not keep:
+                raise ValueError("cannot lose every worker in the fleet")
+            # shrink the fleet's class counts so later tunes/joins see the
+            # true membership (a fully-dead class leaves the fleet)
+            lost_per_class: Dict[str, int] = {}
+            for w in dead:
+                cls = w.rsplit("/", 1)[0]
+                lost_per_class[cls] = lost_per_class.get(cls, 0) + 1
+            self.fleet = Fleet(classes=tuple(
+                dataclasses.replace(c, count=c.count - lost_per_class.get(c.name, 0))
+                for c in self.fleet.classes
+                if c.count - lost_per_class.get(c.name, 0) > 0
+            ))
+            # paper's remedy: dead workers' private shards are gone (nobody
+            # else may read them); public share rebalances in plan_epoch
+            dropped = tuple(
+                s.shard_id for s in self._shards
+                if s.private and s.owner in dead
+            )
+            self._shards = [
+                s for s in self._shards
+                if not (s.private and s.owner in dead)
+            ]
+            # pin capacity to the pre-event max_local: fewer groups, but the
+            # per-group row count is stable (no avoidable max_local shrink)
+            schedule = BatchSchedule(
+                tuple(b for _, b in keep),
+                round_to=old.schedule.round_to,
+                capacity=old.schedule.max_local,
+            )
+            new = TunePlan(result=old.result, schedule=schedule,
+                           group_workers=tuple(w for w, _ in keep))
+
+        elif isinstance(event, WorkerJoined):
+            if any(c.name == event.class_name for c in self.fleet.classes):
+                self.fleet = Fleet(classes=tuple(
+                    dataclasses.replace(c, count=c.count + event.count)
+                    if c.name == event.class_name else c
+                    for c in self.fleet.classes
+                ))
+            elif event.class_name in self._class_templates:
+                # the class fully died earlier; revive it from its template
+                self.fleet = Fleet(classes=self.fleet.classes + (
+                    dataclasses.replace(
+                        self._class_templates[event.class_name],
+                        count=event.count,
+                    ),
+                ))
+            else:
+                raise KeyError(event.class_name)
+            result = tune(self.fleet, self.benchmark)
+            # survivors keep their labels (private shards stay pinned to the
+            # right physical owners); joiners draw fresh never-used indices
+            # from the high-water mark, so a dead worker's label (e.g. the
+            # highest index) is never recycled for a new machine
+            start = self._next_index.get(event.class_name, 0)
+            self._next_index[event.class_name] = start + event.count
+            workers = old.group_workers + tuple(
+                f"{event.class_name}/{start + i}" for i in range(event.count)
+            )
+            schedule = BatchSchedule(
+                tuple(result.batches[w.rsplit("/", 1)[0]] for w in workers),
+                round_to=old.schedule.round_to,
+                capacity=old.schedule.max_local,   # never shrinks; growth
+            )                                      # beyond it recompiles
+            new = TunePlan(result=result, schedule=schedule,
+                           group_workers=workers)
+
+        else:
+            raise TypeError(f"unknown fleet event {event!r}")
+
+        # ---- shared tail: install the new TunePlan, re-plan, re-place ----
+        compiled = self._artifacts.get("compile")
+        keep_compiled = (
+            compiled is not None
+            and compiled.global_rows == new.schedule.global_rows
+        )
+        dataset = self._artifacts.get("dataset")
+        keep_dataset = (
+            dataset is not None and new.group_workers == old.group_workers
+        )
+        self.override("tune", new)          # invalidates plan/place/dataset
+        if keep_compiled:
+            self._artifacts["compile"] = compiled
+        self.plan()
+        self.place()
+        if keep_dataset:
+            # same membership (drift re-tune): rewire the live iterator to
+            # the re-planned schedule AND placement so plan()/place() keep
+            # describing what training samples, while per-worker epoch
+            # cursors survive (no replay of already-seen data)
+            dataset.rewire(
+                new.schedule,
+                manifest_sources(self.place(), list(new.group_workers)),
+            )
+            self._artifacts["dataset"] = dataset
+        else:
+            _ = self.dataset
+        result_obj = ReplanResult(
+            event=event, tune_plan=new,
+            # only a real invalidation counts: with no step compiled yet,
+            # nothing was thrown away
+            recompiled=compiled is not None and not keep_compiled,
+            dropped_shards=dropped,
+        )
+        if isinstance(event, DriftDetected):
+            self.callbacks.emit_retune(event, new)
+        else:
+            self.callbacks.emit_fleet_change(event, result_obj)
+        return result_obj

@@ -100,6 +100,22 @@ class StannisDataset:
                 pairs.extend((shard_id, i) for i in range(n))
             self._space[w] = pairs
 
+    def rewire(
+        self,
+        schedule: BatchSchedule,
+        group_sources: Dict[str, List[Tuple[str, int]]],
+    ) -> None:
+        """Re-point the iterator at a re-planned schedule + placement while
+        preserving per-worker epoch cursors (an online re-tune must not
+        replay already-seen samples)."""
+        cursors = dict(self._cursor)
+        self.schedule = schedule
+        self.group_sources = group_sources
+        self.__post_init__()
+        for w, c in cursors.items():
+            if w in self._cursor and self._space[w]:
+                self._cursor[w] = c % len(self._space[w])
+
     def steps_per_epoch(self) -> int:
         counts = [
             len(self._space[w]) // max(1, b)
@@ -136,6 +152,17 @@ class StannisDataset:
         }
 
 
+def manifest_sources(
+    manifest: PlacementManifest, group_workers: List[str]
+) -> Dict[str, List[Tuple[str, int]]]:
+    """Per-worker (shard_id, n_samples) draws from a placement manifest."""
+    sources: Dict[str, List[Tuple[str, int]]] = {w: [] for w in group_workers}
+    for a in manifest.assignments:
+        if a.worker in sources:
+            sources[a.worker].append((a.shard_id, a.n_samples))
+    return sources
+
+
 def make_stannis_dataset(
     cfg: DataConfig,
     schedule: BatchSchedule,
@@ -150,10 +177,7 @@ def make_stannis_dataset(
     private samples (the paper's remedy) appear as a second pass over the same
     shard (indices wrap in ``next_batch``).
     """
-    sources: Dict[str, List[Tuple[str, int]]] = {w: [] for w in group_workers}
-    for a in manifest.assignments:
-        if a.worker in sources:
-            sources[a.worker].append((a.shard_id, a.n_samples))
+    sources = manifest_sources(manifest, group_workers)
     stores = {
         w: PrivateShardStore(w, shards, cfg) for w in group_workers
     }

@@ -1,19 +1,20 @@
 """Batched serving driver: prefill + decode loop with a KV cache (CPU demo).
 
+Thin argparse front-end over :class:`repro.api.ServeSession`, which owns the
+family-aware prefill/decode control flow.
+
   PYTHONPATH=src python -m repro.launch.serve --arch deepseek-7b --tokens 16
 """
 from __future__ import annotations
 
 import argparse
 import sys
-import time
 
 import jax
-import jax.numpy as jnp
 
+from repro.api import ServeSession
 from repro.configs import ARCHS, get_config, smoke_config
 from repro.models.api import get_model
-from repro.train.steps import make_serve_step
 
 
 def main(argv=None) -> int:
@@ -32,38 +33,15 @@ def main(argv=None) -> int:
     params, _ = model.init_params(key=key)
 
     B, P = args.batch, args.prompt_len
-    cache_len = P + args.tokens + 1
     prompt = jax.random.randint(key, (B, P), 0, cfg.vocab)
 
-    serve = jax.jit(make_serve_step(model))
+    serve = ServeSession(model=model, params=params)
+    out = serve.generate(prompt, max_new_tokens=args.tokens)
 
-    if cfg.family in ("rglru", "rwkv6"):
-        # recurrent archs: feed the prompt token by token (O(1) state)
-        cache = model.init_cache(B, cache_len)
-        tok = prompt[:, 0:1]
-        for t in range(P):
-            pos = jnp.full((B,), t, jnp.int32)
-            nxt, logits, cache = serve(params, prompt[:, t:t + 1], cache, pos)
-        tok, pos0 = nxt, P
-    else:
-        prefill = jax.jit(lambda p, t: model.prefill(p, t, cache_len))
-        logits, cache = prefill(params, prompt)
-        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-        pos0 = P
-
-    out_tokens = [tok]
-    t0 = time.time()
-    for t in range(args.tokens):
-        pos = jnp.full((B,), pos0 + t, jnp.int32)
-        tok, logits, cache = serve(params, tok, cache, pos)
-        out_tokens.append(tok)
-    jax.block_until_ready(tok)
-    dt = time.time() - t0
-    seqs = jnp.concatenate(out_tokens, axis=1)
     print(f"arch={cfg.name} batch={B} prompt={P} decoded={args.tokens}")
-    print(f"decode throughput: {args.tokens * B / dt:.1f} tok/s "
-          f"({dt / args.tokens * 1e3:.1f} ms/step)")
-    print("sample token ids:", seqs[0].tolist())
+    print(f"decode throughput: {out.decode_tok_s:.1f} tok/s "
+          f"({out.ms_per_step:.1f} ms/step)")
+    print("sample token ids:", out.tokens[0].tolist())
     return 0
 
 

@@ -1,8 +1,9 @@
 """End-to-end training driver (CPU-runnable; production flags mirror the pods).
 
-Runs the full Stannis pipeline on a reduced config: Algorithm-1 tune (analytic
-or measured), Eq.-1 epoch plan, privacy placement, then real training steps
-with checkpointing — the same code path the pods run, sized for this host.
+Runs the full Stannis pipeline through the staged Session API: Algorithm-1
+tune (analytic or measured), Eq.-1 epoch plan, privacy placement, then real
+training steps with checkpointing — the same code path the pods run, sized
+for this host.
 
   PYTHONPATH=src python -m repro.launch.train --arch deepseek-7b --steps 50
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-moe-30b-a3b \\
@@ -12,32 +13,16 @@ from __future__ import annotations
 
 import argparse
 import sys
-import time
 
 import jax
 import jax.numpy as jnp
 
+from repro.api import FleetSpec, Session, SessionConfig
 from repro.configs import ARCHS, get_config, smoke_config
-from repro.core.privacy import Shard
-from repro.core.topology import Fleet, WorkerClass
 from repro.core.tuner import measured_benchmark
 from repro.data.pipeline import DataConfig
 from repro.models.api import get_model
 from repro.optim import adamw, sgd_momentum
-from repro.train.trainer import Trainer, TrainerConfig
-
-
-def make_demo_fleet(n_csds: int, host_tput: float = 80.0, csd_tput: float = 10.0) -> Fleet:
-    """Paper-shaped fleet (1 host + N CSD-class workers), laptop-scaled."""
-    host = WorkerClass(
-        name="host", count=1, peak_throughput=host_tput, saturation_batch=8,
-        max_batch=64, active_power=407.0, idle_power=100.0, link_bandwidth=8.0,
-    )
-    csd = WorkerClass(
-        name="csd", count=n_csds, peak_throughput=csd_tput, saturation_batch=2,
-        max_batch=8, active_power=7.0, idle_power=1.5, link_bandwidth=2.0,
-    )
-    return Fleet(classes=(host, csd))
 
 
 def main(argv=None) -> int:
@@ -57,11 +42,13 @@ def main(argv=None) -> int:
 
     cfg = get_config(args.arch) if args.full_config else smoke_config(args.arch)
     model = get_model(cfg)
-    fleet = make_demo_fleet(args.csds)
-
-    shards = [
-        Shard(f"private-csd/{i}", 256, True, f"csd/{i}") for i in range(args.csds)
-    ] + [Shard("public", 65536, False)]
+    spec = FleetSpec.demo(
+        args.csds, host_tput=80.0, csd_tput=10.0,
+        host_max_batch=64, csd_max_batch=8,
+        host_idle=100.0, csd_idle=1.5,
+    )
+    fleet = spec.build()
+    shards = spec.shards(private_per_worker={"csd": 256}, public=65536)
 
     benchmark = None
     if args.measured_tune:
@@ -91,38 +78,40 @@ def main(argv=None) -> int:
             rel = fleet.by_name("host").peak_throughput / fleet.by_name(name).peak_throughput
             return t * rel
 
-    trainer = Trainer(
+    session = Session(
         model=model,
         optimizer=adamw() if args.optimizer == "adamw" else sgd_momentum(),
         fleet=fleet,
-        data_cfg=DataConfig(vocab=cfg.vocab, seq_len=args.seq, seed=args.seed),
-        cfg=TrainerConfig(
+        data=DataConfig(vocab=cfg.vocab, seq_len=args.seq, seed=args.seed),
+        config=SessionConfig(
             total_steps=args.steps,
             checkpoint_dir=args.checkpoint_dir,
             seed=args.seed,
         ),
         shards=shards,
         benchmark=benchmark,
-    ).setup()
+    )
 
+    tune_plan = session.tune()
+    epoch = session.plan()
     print(f"arch={cfg.name} params={cfg.param_count():,}")
-    print(f"tuned batches: {trainer.tune_result.batches} "
-          f"(margin {trainer.tune_result.margin:.0%}, "
-          f"ref={trainer.tune_result.reference_class})")
-    print(f"schedule: groups={trainer.schedule.group_batches} "
-          f"pad={trainer.schedule.pad_fraction:.1%}")
-    print(f"epoch: {trainer.plan.steps_per_epoch} steps, "
-          f"imbalance {trainer.plan.imbalance_steps()} steps")
+    print(f"tuned batches: {tune_plan.batches} "
+          f"(margin {tune_plan.result.margin:.0%}, "
+          f"ref={tune_plan.result.reference_class})")
+    print(f"schedule: groups={tune_plan.schedule.group_batches} "
+          f"pad={tune_plan.schedule.pad_fraction:.1%}")
+    print(f"epoch: {epoch.steps_per_epoch} steps, "
+          f"imbalance {epoch.imbalance_steps()} steps")
 
-    t0 = time.time()
-    params, hist = trainer.train(
-        on_metrics=lambda i, m: print(
+    session.callbacks.on_step(
+        lambda i, m: print(
             f"  step {i:4d} loss {m['loss']:.4f} lr {m['lr']:.2e} "
             f"gnorm {m['grad_norm']:.2f} ({m['step_time']*1e3:.0f} ms)"
         ) if i % 5 == 0 else None
     )
-    dt = time.time() - t0
-    print(f"{args.steps} steps in {dt:.1f}s; "
+    report = session.run()
+    hist = report.history
+    print(f"{report.steps_run} steps in {report.wall_time:.1f}s; "
           f"loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}")
     return 0
 

@@ -1,61 +1,48 @@
-"""The Stannis trainer: tune -> balance -> place -> train, with fault tolerance.
+"""DEPRECATED shim: ``Trainer`` now delegates to :class:`repro.api.Session`.
 
-Orchestrates the full paper pipeline:
-  1. Algorithm 1 tunes per-class batch sizes (measured or analytic benchmark).
-  2. Eq. 1 plans dataset shares so epochs align.
-  3. The privacy planner pins private shards to owners.
-  4. Training runs the masked-weighted SPMD step under ``jax.jit`` with
-     sharding rules; per-class step times feed the :class:`DriftMonitor`,
-     which triggers ONLINE re-tunes (beyond-paper) — shapes never change, so
-     a re-tune costs zero recompilation.
-  5. CheckpointManager gives restart-after-failure; elastic restore handles a
-     shrunk fleet (lost pod => fewer dp-groups; private shards of lost workers
-     follow the paper's backfill/duplication remedy).
+The staged Session API (``session.tune() -> .plan() -> .place() ->
+.compile() -> .run()``) replaced the monolithic ``setup()``/``train()``
+pipeline; new code should construct a Session directly:
+
+    from repro.api import Session, SessionConfig, FleetSpec
+
+This shim keeps the seed surface alive — ``setup``, ``train``, ``retune``,
+``drop_workers`` and the ``tune_result``/``schedule``/``plan``/``manifest``/
+``dataset``/``shards`` attributes — by forwarding everything to a Session.
+``drop_workers`` and ``retune`` now route through the unified
+``Session.apply(FleetEvent)`` path, which fixes the seed bug where a node
+loss rebuilt the :class:`~repro.core.hetero.BatchSchedule` without the
+pinned ``capacity`` and forced an avoidable recompile.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.checkpoint.manager import CheckpointManager
-from repro.core.hetero import BatchSchedule, schedule_from_tune
-from repro.core.load_balance import plan_epoch
-from repro.core.privacy import PlacementManifest, Shard, place
+from repro.api.events import DriftDetected, WorkerLost
+from repro.api.session import Session, SessionConfig
+from repro.core.hetero import BatchSchedule
+from repro.core.load_balance import EpochPlan
+from repro.core.privacy import PlacementManifest, Shard
 from repro.core.topology import Fleet
-from repro.core.tuner import DriftMonitor, TuneResult, tune
-from repro.data.pipeline import DataConfig, make_stannis_dataset
+from repro.core.tuner import TuneResult
+from repro.data.pipeline import DataConfig, StannisDataset
 from repro.models.api import Model
 from repro.optim.optimizers import Optimizer
-from repro.optim.schedules import goyal_schedule
-from repro.train.steps import make_train_step
 
 PyTree = Any
 
 
 @dataclasses.dataclass
-class TrainerConfig:
-    total_steps: int = 100
-    base_lr: float = 1e-3
-    base_batch: int = 256
-    warmup_steps: int = 20
-    aux_weight: float = 0.01
-    checkpoint_dir: Optional[str] = None
-    checkpoint_every: int = 50
-    keep_checkpoints: int = 3
-    async_checkpoint: bool = True
-    retune_margin: float = 0.2       # DriftMonitor threshold = tuner 1/E
-    retune_patience: int = 10
-    log_every: int = 10
-    seed: int = 0
+class TrainerConfig(SessionConfig):
+    """Deprecated alias of :class:`repro.api.SessionConfig`."""
 
 
 @dataclasses.dataclass
 class Trainer:
+    """Deprecated: use :class:`repro.api.Session`."""
+
     model: Model
     optimizer: Optimizer
     fleet: Fleet
@@ -64,54 +51,68 @@ class Trainer:
     shards: Sequence[Shard]
     benchmark: Optional[Callable[[str, int], float]] = None
 
-    # populated by setup()
-    tune_result: Optional[TuneResult] = None
-    schedule: Optional[BatchSchedule] = None
-    group_workers: Optional[List[str]] = None
-    manifest: Optional[PlacementManifest] = None
+    session: Optional[Session] = None
+
+    def __post_init__(self):
+        warnings.warn(
+            "repro.train.trainer.Trainer is deprecated; use repro.api.Session",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+
+    def _session(self) -> Session:
+        if self.session is None:
+            self.session = Session(
+                model=self.model,
+                optimizer=self.optimizer,
+                fleet=self.fleet,
+                data=self.data_cfg,
+                shards=list(self.shards),
+                config=self.cfg,
+                benchmark=self.benchmark,
+            )
+        return self.session
+
+    # -- seed attribute surface (all derived from session artifacts) -------
+
+    @property
+    def tune_result(self) -> Optional[TuneResult]:
+        s = self._session()
+        return s.tune().result if s.cached("tune") else None
+
+    @property
+    def schedule(self) -> Optional[BatchSchedule]:
+        s = self._session()
+        return s.tune().schedule if s.cached("tune") else None
+
+    @property
+    def group_workers(self) -> Optional[List[str]]:
+        s = self._session()
+        return list(s.tune().group_workers) if s.cached("tune") else None
+
+    @property
+    def plan(self) -> Optional[EpochPlan]:
+        s = self._session()
+        return s.plan() if s.cached("plan") else None
+
+    @property
+    def manifest(self) -> Optional[PlacementManifest]:
+        s = self._session()
+        return s.place() if s.cached("place") else None
+
+    @property
+    def dataset(self) -> StannisDataset:
+        return self._session().dataset
+
+    # -- seed method surface -----------------------------------------------
 
     def setup(self) -> "Trainer":
-        # 1. Algorithm 1
-        self.tune_result = tune(self.fleet, self.benchmark)
-        class_counts = {c.name: c.count for c in self.fleet.classes}
-        self.schedule, self.group_workers = schedule_from_tune(
-            self.tune_result.batches, class_counts
-        )
-        # 2. Eq. 1 over physical workers
-        batches = {
-            w: b for w, b in zip(self.group_workers, self.schedule.group_batches)
-        }
-        private_sizes = {w: 0 for w in self.group_workers}
-        n_public = 0
-        for s in self.shards:
-            if s.private:
-                private_sizes[s.owner] = private_sizes.get(s.owner, 0) + s.n_samples
-            else:
-                n_public += s.n_samples
-        self.plan = plan_epoch(batches, private_sizes, n_public)
-        # 3. privacy placement against the planned shares
-        targets = {sh.worker: sh.total for sh in self.plan.shares}
-        self.manifest = place(list(self.shards), targets)
-        # 4. data pipeline
-        self.dataset = make_stannis_dataset(
-            self.data_cfg, self.schedule, self.group_workers, self.plan,
-            self.manifest, self.shards,
-        )
+        s = self._session()
+        s.tune()
+        s.plan()
+        s.place()
+        _ = s.dataset
         return self
-
-    # -- the jitted step -----------------------------------------------------
-    def _build_step(self):
-        sched = goyal_schedule(
-            self.cfg.base_lr,
-            self.schedule.valid_rows,
-            base_batch=self.cfg.base_batch,
-            warmup_steps=self.cfg.warmup_steps,
-            total_steps=self.cfg.total_steps,
-        )
-        step = make_train_step(
-            self.model, self.optimizer, sched, aux_weight=self.cfg.aux_weight
-        )
-        return jax.jit(step, donate_argnums=(0, 1))
 
     def train(
         self,
@@ -120,106 +121,29 @@ class Trainer:
         steps: Optional[int] = None,
         on_metrics: Optional[Callable[[int, Dict], None]] = None,
     ) -> Tuple[PyTree, List[Dict[str, float]]]:
-        if self.schedule is None:
-            self.setup()
-        steps = steps or self.cfg.total_steps
-        key = jax.random.PRNGKey(self.cfg.seed)
-        if params is None:
-            params, _ = self.model.init_params(key=key)
-        opt_state = self.optimizer.init(params)
-
-        ckpt = (
-            CheckpointManager(self.cfg.checkpoint_dir, keep=self.cfg.keep_checkpoints)
-            if self.cfg.checkpoint_dir else None
-        )
-        start_step = 0
-        if ckpt is not None and ckpt.latest_step() is not None:
-            # restart-after-failure: resume newest valid checkpoint
-            state, meta = ckpt.restore({"params": params, "opt": opt_state})
-            params, opt_state = state["params"], state["opt"]
-            start_step = int(meta.get("step", ckpt.latest_step()))
-
-        step_fn = self._build_step()
-        monitor = DriftMonitor(
-            margin=self.cfg.retune_margin, patience=self.cfg.retune_patience
-        )
-        history: List[Dict[str, float]] = []
-
-        for i in range(start_step, steps):
-            batch_np = self.dataset.next_batch()
-            batch = {
-                "tokens": jnp.asarray(batch_np["tokens"]),
-                "labels": jnp.asarray(batch_np["labels"]),
-                "loss_mask": jnp.asarray(batch_np["loss_mask"]),
-            }
-            t0 = time.perf_counter()
-            params, opt_state, metrics = step_fn(params, opt_state, batch)
-            metrics = {k: float(v) for k, v in metrics.items()}
-            metrics["step_time"] = time.perf_counter() - t0
-            history.append(metrics)
-
-            # straggler watch: feed per-class analytic times perturbed by the
-            # observed wall time (single-host stand-in for per-worker probes)
-            class_times = {
-                c.name: self.fleet.by_name(c.name).step_time(
-                    self.tune_result.batches[c.name]
-                )
-                for c in self.fleet.classes
-            }
-            if monitor.update(class_times):
-                self.retune()
-
-            if on_metrics:
-                on_metrics(i, metrics)
-            if ckpt is not None and (i + 1) % self.cfg.checkpoint_every == 0:
-                ckpt.save(
-                    i + 1, {"params": params, "opt": opt_state},
-                    metadata={"step": i + 1,
-                              "schedule": list(self.schedule.group_batches)},
-                    async_=self.cfg.async_checkpoint,
-                )
-        if ckpt is not None:
-            ckpt.wait()
-        return params, history
+        s = self._session()
+        remove = None
+        if on_metrics is not None:
+            remove = s.callbacks.on_step(on_metrics)
+        try:
+            report = s.run(params, steps=steps)
+        finally:
+            if remove is not None:
+                s.callbacks.remove_on_step(remove)
+        return report.params, list(report.history)
 
     def retune(self) -> None:
         """Online re-tune: new batch shares, same shapes => no recompilation."""
-        self.tune_result = tune(self.fleet, self.benchmark)
-        class_counts = {c.name: c.count for c in self.fleet.classes}
-        new_sched, workers = schedule_from_tune(
-            self.tune_result.batches, class_counts
-        )
-        self.schedule = self.schedule.with_batches(new_sched.group_batches)
-        self.dataset.schedule = self.schedule
+        self._session().apply(DriftDetected(source="manual"))
 
-    # -- failure handling ------------------------------------------------------
     def drop_workers(self, dead: Sequence[str]) -> None:
-        """Node failure: remove dp-groups, re-plan data with the paper's remedy
-        (dead workers' public share rebalances; their private shards are gone
-        — by the privacy constraint nobody else may read them)."""
-        alive = [w for w in self.group_workers if w not in set(dead)]
-        keep_idx = [i for i, w in enumerate(self.group_workers) if w in set(alive)]
-        self.group_workers = alive
-        self.schedule = BatchSchedule(
-            tuple(self.schedule.group_batches[i] for i in keep_idx),
-            round_to=self.schedule.round_to,
-        )
-        live_shards = [
-            s for s in self.shards if not (s.private and s.owner in set(dead))
-        ]
-        self.shards = live_shards
-        batches = {w: b for w, b in zip(self.group_workers, self.schedule.group_batches)}
-        private_sizes = {w: 0 for w in alive}
-        n_public = 0
-        for s in live_shards:
-            if s.private:
-                private_sizes[s.owner] = private_sizes.get(s.owner, 0) + s.n_samples
-            else:
-                n_public += s.n_samples
-        self.plan = plan_epoch(batches, private_sizes, n_public)
-        targets = {sh.worker: sh.total for sh in self.plan.shares}
-        self.manifest = place(live_shards, targets)
-        self.dataset = make_stannis_dataset(
-            self.data_cfg, self.schedule, self.group_workers, self.plan,
-            self.manifest, live_shards,
-        )
+        """Node failure (paper's backfill/duplication remedy), routed through
+        the unified ``Session.apply(WorkerLost)`` replanning path.
+
+        Seed parity: unknown / already-dropped names are ignored (failure
+        detectors double-report), where the Session API itself is strict."""
+        s = self._session()
+        known = [w for w in dead if w in s.tune().group_workers]
+        if known:
+            s.apply(WorkerLost(known))
+        self.shards = list(s.shards)

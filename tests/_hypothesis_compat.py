@@ -1,0 +1,40 @@
+"""Optional-hypothesis shim (the importorskip fix, minus the collateral).
+
+A bare ``pytest.importorskip("hypothesis")`` at module scope would skip the
+WHOLE module — including plain unit tests.  Importing ``given/settings/st``
+from here instead keeps unit tests running everywhere and turns each
+``@given`` property test into a clean skip when hypothesis is absent.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+except ImportError:
+
+    class _StubStrategies:
+        """Accepts any strategy construction; never executed."""
+
+        def __getattr__(self, name):
+            def _stub(*args, **kwargs):
+                return None
+            return _stub
+
+    st = _StubStrategies()
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            # replace with a zero-arg stub so pytest neither errors on the
+            # strategy-named parameters nor runs the body
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def skipped():
+                pass  # pragma: no cover
+
+            skipped.__name__ = fn.__name__
+            skipped.__doc__ = fn.__doc__
+            return skipped
+        return deco

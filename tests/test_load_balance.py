@@ -1,6 +1,6 @@
 """Eq. 1 load balancing + privacy placement tests."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import load_balance as lb
 from repro.core import privacy

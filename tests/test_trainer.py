@@ -7,10 +7,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.api import FleetSpec
 from repro.configs import smoke_config
 from repro.core.hetero import BatchSchedule
 from repro.core.privacy import Shard
-from repro.core.topology import Fleet, WorkerClass
 from repro.data.pipeline import DataConfig, PrivateShardStore, synth_sequence
 from repro.models.api import get_model
 from repro.optim import adamw
@@ -18,16 +18,13 @@ from repro.train.trainer import Trainer, TrainerConfig
 
 
 def _fleet(n_csds=2):
-    return Fleet(classes=(
-        WorkerClass("host", 1, 100.0, 8, max_batch=16, active_power=400.0),
-        WorkerClass("csd", n_csds, 25.0, 2, max_batch=4, active_power=7.0),
-    ))
+    return FleetSpec.demo(n_csds).build()
 
 
 def _shards(n_csds=2):
-    return [
-        Shard(f"priv-csd/{i}", 64, True, f"csd/{i}") for i in range(n_csds)
-    ] + [Shard("public", 4096, False)]
+    return FleetSpec.demo(n_csds).shards(
+        private_per_worker={"csd": 64}, public=4096, prefix="priv"
+    )
 
 
 def _trainer(tmp_path=None, steps=6, n_csds=2):

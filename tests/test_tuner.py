@@ -2,8 +2,9 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
+from repro.api import FleetSpec
 from repro.core import topology, tuner
 
 
@@ -32,10 +33,13 @@ def test_slowest_class_anchors():
 
 
 def test_respects_max_batch():
-    host = topology.WorkerClass("host", 1, 100.0, 8, max_batch=32,
-                                active_power=100.0)
-    csd = topology.WorkerClass("csd", 2, 1.0, 4, max_batch=8, active_power=5.0)
-    r = tuner.tune(topology.Fleet((host, csd)))
+    fleet = (
+        FleetSpec.custom("capped")
+        .add("host", 1, 100.0, 8, 32, active_power=100.0)
+        .add("csd", 2, 1.0, 4, 8, active_power=5.0)
+        .build()
+    )
+    r = tuner.tune(fleet)
     assert r.batches["host"] <= 32
     assert r.batches["csd"] <= 8
 
@@ -50,11 +54,13 @@ def test_margin_property(ratio, E, C):
     """For ANY throughput ratio and (C, E), the tuned fast class lands within
     the [0, 2/E] band around the target margin (discreteness tolerance),
     unless capped by max_batch."""
-    fast = topology.WorkerClass("fast", 1, ratio, 4, max_batch=10 ** 6,
-                                active_power=100.0)
-    slow = topology.WorkerClass("slow", 1, 1.0, 4, max_batch=64,
-                                active_power=5.0)
-    r = tuner.tune(topology.Fleet((fast, slow)), C=C, E=E, max_iters=500)
+    fleet = (
+        FleetSpec.custom("ratio")
+        .add("fast", 1, ratio, 4, 10 ** 6, active_power=100.0)
+        .add("slow", 1, 1.0, 4, 64, active_power=5.0)
+        .build()
+    )
+    r = tuner.tune(fleet, C=C, E=E, max_iters=500)
     t_f, t_s = r.step_times["fast"], r.step_times["slow"]
     margin = (t_f - t_s) / t_s
     assert margin >= 1.0 / E - 1e-6, (margin, 1 / E)
