@@ -20,7 +20,7 @@ import jax.numpy as jnp
 
 from repro.configs import smoke_config
 from repro.core.hetero import BatchSchedule
-from repro.data.pipeline import DataConfig, synth_sequence
+from repro.storage import DataConfig, synth_sequence
 from repro.models.api import get_model
 from repro.optim import sgd_momentum
 from repro.optim.schedules import goyal_schedule

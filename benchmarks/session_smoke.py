@@ -2,7 +2,16 @@
 
 Exercises what the paper's rack would see in production: tune -> plan ->
 place -> compile -> train, then a drift re-tune (must NOT recompile) and a
-node loss (paper's backfill remedy), all through ``repro.api.Session``.
+node loss (paper's backfill remedy), all through ``repro.api.Session`` —
+pulled through the selected :mod:`repro.storage` backend (``--backend
+synthetic|flash|meshfeed``).  The meshfeed run on a multi-device host
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8``) is the
+multi-device acceptance path: batches land pre-sharded on a real
+``jax.sharding.Mesh``.
+
+    PYTHONPATH=src python benchmarks/session_smoke.py
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python benchmarks/session_smoke.py --backend meshfeed
 """
 from __future__ import annotations
 
@@ -14,16 +23,16 @@ from repro.api import (
     DriftDetected, FleetSpec, Session, SessionConfig, WorkerLost,
 )
 from repro.configs import smoke_config
-from repro.data.pipeline import DataConfig
 from repro.models.api import get_model
 from repro.optim import adamw
+from repro.storage import DataConfig
 
 STEPS = 8
 
 
-def _session(n_csds: int = 3) -> Session:
+def _session(n_csds: int = 3, backend: str = "synthetic") -> Session:
     cfg = smoke_config("deepseek-7b")
-    spec = FleetSpec.demo(n_csds=n_csds)
+    spec = FleetSpec.demo(n_csds=n_csds).with_storage(backend)
     return Session(
         model=get_model(cfg),
         optimizer=adamw(),
@@ -34,8 +43,8 @@ def _session(n_csds: int = 3) -> Session:
     )
 
 
-def run(verbose: bool = True) -> Dict[str, float]:
-    s = _session()
+def run(verbose: bool = True, backend: str = "synthetic") -> Dict[str, float]:
+    s = _session(backend=backend)
     report = s.run()
     loss0, loss1 = report.history[0]["loss"], report.final_loss
 
@@ -45,10 +54,16 @@ def run(verbose: bool = True) -> Dict[str, float]:
     assert not drift.recompiled and s.compile_count == compiles_before
 
     # node loss: one dp-group gone, survivors re-plan (backfill remedy);
-    # training continues with optimizer moments and warmup progress intact
+    # training continues with optimizer moments and warmup progress intact.
+    # Custody routes through the DeviceFleet: csd/1's private shard is
+    # quarantined, its public custody re-homes to a survivor.
     lost = s.apply(WorkerLost(["csd/1"]))
     report2 = s.run(report.params, opt_state=report.opt_state, steps=2)
 
+    from repro.core.privacy import audit_custody
+    audit = audit_custody(s.devices.custody_log)
+
+    mesh = s.devices.mesh
     out = {
         "loss_start": loss0,
         "loss_end": loss1,
@@ -56,18 +71,37 @@ def run(verbose: bool = True) -> Dict[str, float]:
         "drift_recompiled": float(drift.recompiled),
         "groups_after_loss": float(lost.tune_plan.schedule.n_groups),
         "compile_count": float(s.compile_count),
+        "private_shards_rehomed": float(audit["private_shards_rehomed"]),
+        "feed_devices": float(mesh.shape["data"]) if mesh is not None else 1.0,
     }
     if verbose:
-        print("\n== Session-API smoke ==")
+        print(f"\n== Session-API smoke [{backend}] ==")
         for k, v in out.items():
             print(f"  {k:>22s}: {v:.4f}")
     return out
 
 
-def validate() -> Dict[str, bool]:
-    m = run(verbose=False)
+def _checks(m: Dict[str, float]) -> Dict[str, bool]:
     return {
         "loss_decreases": m["loss_end"] < m["loss_start"],
         "drift_no_recompile": m["drift_recompiled"] == 0.0,
         "survives_node_loss": bool(np.isfinite(m["loss_after_loss_event"])),
+        "no_private_rehome": m["private_shards_rehomed"] == 0.0,
     }
+
+
+def validate(backend: str = "synthetic") -> Dict[str, bool]:
+    return _checks(run(verbose=False, backend=backend))
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="synthetic",
+                    choices=["synthetic", "flash", "meshfeed"])
+    args = ap.parse_args()
+    checks = _checks(run(backend=args.backend))
+    print("checks:", checks)
+    sys.exit(0 if all(checks.values()) else 1)

@@ -4,12 +4,14 @@
 """
 from repro.api import FleetSpec, Session, SessionConfig
 from repro.configs import smoke_config
-from repro.data.pipeline import DataConfig
+from repro.storage import DataConfig
 from repro.models.api import get_model
 from repro.optim import adamw
 
 # 1. A heterogeneous fleet: one fast "host" class + two slow "CSD"-class
-#    workers (the paper's Newport role, scaled to this machine).
+#    workers (the paper's Newport role, scaled to this machine).  Each worker
+#    gets a storage device; swap the data plane with one line, e.g.
+#    FleetSpec.demo(n_csds=2).with_storage("flash")  (or "meshfeed").
 spec = FleetSpec.demo(n_csds=2)
 
 # 2. Data: private shards pinned to their owners + a public pool.
@@ -31,9 +33,12 @@ session = Session(
 # Each stage is an explicit, cached, inspectable artifact.
 tune_plan = session.tune()      # Algorithm 1
 epoch = session.plan()          # Eq. 1
-session.place()                 # privacy placement
+manifest = session.place()      # privacy placement, fleet-aware
 
 print("Algorithm-1 tuned batches :", tune_plan.batches)
+print("storage devices           :",
+      {d.worker: f"{d.backend}:{len(d.custody)} shards"
+       for d in manifest.devices})
 print("Eq.-1 steps per epoch     :", epoch.steps_per_epoch,
       f"(imbalance {epoch.imbalance_steps()} steps)")
 print("group schedule            :", tune_plan.schedule.group_batches,

@@ -11,7 +11,7 @@ full run on a real machine).
 import argparse
 
 from repro.api import FleetSpec, Session, SessionConfig
-from repro.data.pipeline import DataConfig
+from repro.storage import DataConfig
 from repro.models.api import get_model
 from repro.models.config import ModelConfig
 from repro.optim import adamw

@@ -1,6 +1,8 @@
 #!/usr/bin/env bash
-# Tier-1 CI: install the test extra (when the network allows) and run the
-# suite.  Reproduces the green/red state locally:  ./scripts/ci.sh
+# Tier-1 CI: install the test extra (when the network allows), run the
+# suite, then the Session-API benchmark smoke (elastic paths + the
+# meshfeed multi-device storage backend).  Reproduces the green/red state
+# locally:  ./scripts/ci.sh
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -13,4 +15,13 @@ else
     echo "[ci] pip install unavailable; using preinstalled deps"
 fi
 
-exec python -m pytest -x -q
+python -m pytest -x -q
+
+echo "[ci] session smoke (synthetic backend)"
+PYTHONPATH=src python benchmarks/session_smoke.py
+
+echo "[ci] session smoke (meshfeed backend, 8-device CPU mesh)"
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python benchmarks/session_smoke.py --backend meshfeed
+
+echo "[ci] OK"

@@ -24,18 +24,22 @@ from repro.api.events import (
 from repro.api.fleet import FleetSpec
 from repro.api.serving import GenerateResult, ServeSession
 from repro.api.session import Session, SessionConfig
+from repro.storage import DeviceFleet, FleetManifest, StorageSpec
 
 __all__ = [
     "CallbackRegistry",
     "CompiledStep",
+    "DeviceFleet",
     "DriftDetected",
     "FleetEvent",
+    "FleetManifest",
     "FleetSpec",
     "GenerateResult",
     "ReplanResult",
     "ServeSession",
     "Session",
     "SessionConfig",
+    "StorageSpec",
     "TrainReport",
     "TunePlan",
     "WorkerJoined",

@@ -20,14 +20,22 @@ from typing import List, Mapping, Optional, Tuple
 
 from repro.core.privacy import Shard
 from repro.core.topology import Fleet, WorkerClass, paper_fleet, tpu_fleet
+from repro.storage import StorageSpec
 
 
 @dataclasses.dataclass(frozen=True)
 class FleetSpec:
-    """Immutable description of a heterogeneous fleet."""
+    """Immutable description of a heterogeneous fleet.
+
+    ``storage`` selects the data plane: which
+    :class:`~repro.storage.StorageDevice` backend every worker's device uses
+    (``synthetic`` | ``flash`` | ``meshfeed``); see
+    :meth:`with_storage`.
+    """
 
     classes: Tuple[WorkerClass, ...] = ()
     name: str = "custom"
+    storage: StorageSpec = dataclasses.field(default_factory=StorageSpec)
 
     # -- presets -----------------------------------------------------------
 
@@ -101,6 +109,16 @@ class FleetSpec:
             link_bandwidth=link_bandwidth,
         )
         return dataclasses.replace(self, classes=self.classes + (wc,))
+
+    def with_storage(self, backend: str, **kw) -> "FleetSpec":
+        """Select the storage backend for every device in the fleet:
+
+            FleetSpec.demo(3).with_storage("flash", root="/data/spool")
+            FleetSpec.demo(3).with_storage("meshfeed")
+        """
+        return dataclasses.replace(
+            self, storage=StorageSpec(backend=backend, **kw)
+        )
 
     def build(self) -> Fleet:
         if not self.classes:

@@ -10,9 +10,17 @@ cached, individually overridable stage artifacts:
                       shards=spec.shards(...), config=SessionConfig(...))
     tune_plan = session.tune()      # Algorithm 1 -> TunePlan
     epoch     = session.plan()      # Eq. 1       -> EpochPlan
-    manifest  = session.place()     # privacy     -> PlacementManifest
+    manifest  = session.place()     # privacy     -> FleetManifest (device-aware)
     step      = session.compile()   # jitted SPMD -> CompiledStep
     report    = session.run()       # training    -> TrainReport
+
+The data plane is the :mod:`repro.storage` device fleet: ``session.devices``
+is a :class:`~repro.storage.DeviceFleet` (one StorageDevice per dp-group
+worker, backend chosen by ``StorageSpec`` / ``FleetSpec.with_storage``), and
+``run()`` pulls every batch through it — each group's rows are assembled in
+its own device, and elastic events re-home custody through the fleet API
+(WorkerLost quarantines the dead device's private shards and re-homes its
+public custody; WorkerJoined provisions a fresh device).
 
 Stages are lazy and memoized: calling ``run()`` directly executes the whole
 chain; calling a stage twice returns the SAME artifact object.  A stage can
@@ -51,10 +59,11 @@ from repro.core.load_balance import EpochPlan, plan_epoch
 from repro.core.privacy import PlacementManifest, Shard, place
 from repro.core.topology import Fleet
 from repro.core.tuner import BenchmarkFn, DriftMonitor, tune
-from repro.data.pipeline import (
-    DataConfig, StannisDataset, make_stannis_dataset, manifest_sources,
-)
 from repro.models.api import Model
+from repro.storage import (
+    DataConfig, DeviceFleet, FleetBatcher, FleetManifest, StorageSpec,
+    make_fleet_batcher, manifest_sources,
+)
 from repro.optim.optimizers import Optimizer
 from repro.optim.schedules import goyal_schedule
 from repro.train.steps import make_train_step
@@ -112,15 +121,23 @@ class Session:
         config: Optional[SessionConfig] = None,
         benchmark: Optional[BenchmarkFn] = None,
         callbacks: Optional[CallbackRegistry] = None,
+        storage: Optional[StorageSpec] = None,
     ):
         self.model = model
         self.optimizer = optimizer
+        spec_storage = fleet.storage if isinstance(fleet, FleetSpec) else None
         self.fleet: Fleet = fleet.build() if isinstance(fleet, FleetSpec) else fleet
         self.data = data
         self._shards: List[Shard] = list(shards)
         self.config = config or SessionConfig()
         self.benchmark = benchmark
         self.callbacks = callbacks or CallbackRegistry()
+        # the storage data plane: explicit arg > FleetSpec.storage > default
+        self.storage: StorageSpec = storage or spec_storage or StorageSpec()
+        # the device fleet persists across stage rebuilds — custody state
+        # (quarantine tombstones, re-homed public shards) must survive
+        # re-plans exactly like live membership does
+        self._device_fleet: Optional[DeviceFleet] = None
         self._artifacts: Dict[str, Any] = {}
         self._compile_count = 0
         # WorkerClass templates survive a fully-dead class leaving the fleet,
@@ -153,6 +170,16 @@ class Session:
     def compile_count(self) -> int:
         """How many times a CompiledStep was built (the no-recompile probe)."""
         return self._compile_count
+
+    @property
+    def devices(self) -> DeviceFleet:
+        """The live storage device fleet (provisioned on first access)."""
+        if self._device_fleet is None:
+            tp = self.tune()
+            self._device_fleet = DeviceFleet.provision(
+                tp.group_workers, self._shards, self.data, spec=self.storage,
+            )
+        return self._device_fleet
 
     def cached(self, stage: str) -> bool:
         return stage in self._artifacts
@@ -236,24 +263,28 @@ class Session:
 
     # -- stage 3: privacy placement ---------------------------------------
 
-    def place(self, *, force: bool = False) -> PlacementManifest:
+    def place(self, *, force: bool = False) -> FleetManifest:
+        """Privacy placement, fleet-aware: the core manifest wrapped with
+        per-device custody records (which device holds which shards, under
+        which backend)."""
         if force:
             self._invalidate("place")
         if "place" not in self._artifacts:
             epoch = self.plan()
             targets = {sh.worker: sh.total for sh in epoch.shares}
-            self._artifacts["place"] = place(list(self._shards), targets)
+            core = place(list(self._shards), targets)
+            self._artifacts["place"] = self.devices.manifest(core)
         return self._artifacts["place"]
 
     # -- stage 3b: data pipeline (internal, derived from plan + place) -----
 
     @property
-    def dataset(self) -> StannisDataset:
+    def dataset(self) -> FleetBatcher:
         if "dataset" not in self._artifacts:
             tp = self.tune()
-            self._artifacts["dataset"] = make_stannis_dataset(
-                self.data, tp.schedule, list(tp.group_workers), self.plan(),
-                self.place(), self._shards,
+            self._artifacts["dataset"] = make_fleet_batcher(
+                self.data, tp.schedule, list(tp.group_workers),
+                self.place(), self.devices,
             )
         return self._artifacts["dataset"]
 
@@ -332,6 +363,17 @@ class Session:
 
         compiled = self.compile()
         dataset = self.dataset
+        # meshfeed: batches land sharded on the fleet's mesh, so model state
+        # must live on the SAME device set.  Elastic events can resize the
+        # mesh (the data axis tracks global_rows), so re-home params/opt
+        # onto the live mesh — a no-op when it did not change.
+        feed_mesh = self.devices.feed_mesh(self.tune().schedule.global_rows)
+        if feed_mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+
+            replicated = NamedSharding(feed_mesh, PartitionSpec())
+            params = jax.device_put(params, replicated)
+            opt_state = jax.device_put(opt_state, replicated)
         monitor = DriftMonitor(
             margin=cfg.retune_margin, patience=cfg.retune_patience
         )
@@ -339,12 +381,10 @@ class Session:
         t0 = time.perf_counter()
 
         for i in range(start_step, steps):
-            batch_np = dataset.next_batch()
-            batch = {
-                "tokens": jnp.asarray(batch_np["tokens"]),
-                "labels": jnp.asarray(batch_np["labels"]),
-                "loss_mask": jnp.asarray(batch_np["loss_mask"]),
-            }
+            # batches come THROUGH the device fleet: each dp-group's rows are
+            # assembled in its storage device, and the meshfeed backend lands
+            # them pre-sharded on the mesh
+            batch = dataset.next_device_batch()
             ts = time.perf_counter()
             params, opt_state, metrics = compiled.step_fn(params, opt_state, batch)
             metrics = {k: float(v) for k, v in metrics.items()}
@@ -437,12 +477,11 @@ class Session:
                 for c in self.fleet.classes
                 if c.count - lost_per_class.get(c.name, 0) > 0
             ))
-            # paper's remedy: dead workers' private shards are gone (nobody
-            # else may read them); public share rebalances in plan_epoch
-            dropped = tuple(
-                s.shard_id for s in self._shards
-                if s.private and s.owner in dead
-            )
+            # paper's remedy, routed through the fleet custody API: dead
+            # workers' private shards are quarantined (nobody else may read
+            # them — tombstoned on every surviving device), their public
+            # custody re-homes to survivors; plan_epoch rebalances the share
+            dropped = self.devices.quarantine_workers(sorted(dead))
             self._shards = [
                 s for s in self._shards
                 if not (s.private and s.owner in dead)
@@ -481,9 +520,14 @@ class Session:
             # highest index) is never recycled for a new machine
             start = self._next_index.get(event.class_name, 0)
             self._next_index[event.class_name] = start + event.count
-            workers = old.group_workers + tuple(
+            joiners = tuple(
                 f"{event.class_name}/{start + i}" for i in range(event.count)
             )
+            workers = old.group_workers + joiners
+            # provision fresh storage devices for the joiners (they hold the
+            # public pool; no private shards exist for a new worker yet)
+            for w in joiners:
+                self.devices.provision_worker(w)
             schedule = BatchSchedule(
                 tuple(result.batches[w.rsplit("/", 1)[0]] for w in workers),
                 round_to=old.schedule.round_to,

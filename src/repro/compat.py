@@ -1,0 +1,98 @@
+"""jax version compatibility: one import site for APIs that moved.
+
+The repo targets the modern mesh API (``jax.sharding.AxisType``,
+``jax.set_mesh``, ``jax.make_mesh(..., axis_types=...)``,
+``jax.sharding.get_abstract_mesh``), but must also run on jax 0.4.x where
+none of those exist.  Every call site imports the equivalents from here
+instead of feature-testing jax inline:
+
+  * :func:`make_mesh` — builds an Auto-axis mesh on both API generations.
+  * :func:`set_mesh` — context manager activating a mesh; on 0.4.x the
+    ``Mesh`` object itself is the context manager.
+  * :func:`get_abstract_mesh` — the mesh active at trace time, or ``None``;
+    on 0.4.x this is the thread-local *physical* mesh, which is strictly
+    richer (it also carries devices), so callers treat both uniformly.
+  * :func:`constraint_sharding` — wraps a PartitionSpec for
+    ``with_sharding_constraint``: bare spec under an abstract mesh,
+    ``NamedSharding`` when the mesh is physical (0.4.x requirement outside
+    a mesh context).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+try:  # jax >= 0.6
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+except ImportError:  # jax 0.4.x: meshes are implicitly Auto
+    AxisType = None
+
+HAS_AXIS_TYPES = AxisType is not None
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]) -> Mesh:
+    """``jax.make_mesh`` with Auto axis types on any jax generation."""
+    if HAS_AXIS_TYPES:
+        return jax.make_mesh(
+            tuple(axis_shapes), tuple(axis_names),
+            axis_types=(AxisType.Auto,) * len(axis_names),
+        )
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))
+
+
+def set_mesh(mesh: Mesh):
+    """Context manager that makes ``mesh`` the ambient mesh.
+
+    jax >= 0.6 exposes ``jax.set_mesh``; on 0.4.x entering the ``Mesh``
+    object itself installs it as the thread-local physical mesh, which is
+    what ``get_abstract_mesh`` below reads back.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def get_abstract_mesh():
+    """The ambient mesh visible at trace time, or ``None`` when outside one.
+
+    Returns the AbstractMesh on jax >= 0.6 and the thread-local physical
+    ``Mesh`` on 0.4.x.  Both expose ``axis_names`` and ``shape``.
+    """
+    try:
+        m = jax.sharding.get_abstract_mesh()  # type: ignore[attr-defined]
+        return None if m is None or m.empty else m
+    except AttributeError:
+        pass
+    try:
+        from jax.interpreters import pxla
+
+        m = pxla.thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:
+        return None
+
+
+def axis_size(axis_name: str) -> int:
+    """``jax.lax.axis_size`` (>= 0.5); falls back to the bound axis frame.
+
+    On 0.4.x ``jax.core.axis_frame`` returns the size int directly.
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    frame = jax.core.axis_frame(axis_name)  # type: ignore[attr-defined]
+    return frame if isinstance(frame, int) else frame.size
+
+
+def constraint_sharding(
+    mesh, spec: PartitionSpec
+) -> Union[PartitionSpec, NamedSharding]:
+    """What to hand ``with_sharding_constraint`` for ``spec`` under ``mesh``.
+
+    A physical mesh (0.4.x path) needs an explicit ``NamedSharding``; an
+    abstract mesh (>= 0.6) resolves the bare spec itself.
+    """
+    if isinstance(mesh, Mesh):
+        return NamedSharding(mesh, spec)
+    return spec

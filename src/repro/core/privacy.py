@@ -6,10 +6,14 @@ TPU fleet the analogue is pod-local (or dp-group-local) residency: a private
 shard is pinned to its home dp-group and is only ever read by that group's
 input pipeline.
 
-This module produces an explicit, auditable *placement manifest*; the data
-pipeline (:mod:`repro.data.pipeline`) refuses to materialize a private shard
-on any worker other than its owner — the manifest is the enforcement point,
-mirroring how the paper's ISP engine is the only thing that can touch flash.
+This module produces an explicit, auditable *placement manifest*; the storage
+layer (:mod:`repro.storage`) refuses to materialize a private shard on any
+device other than its owner's — every backend's custody guard is the
+enforcement point, mirroring how the paper's ISP engine is the only thing
+that can touch flash.  Custody *changes* (re-homes after a node loss,
+quarantines of a dead owner's privates) are logged as :class:`CustodyEvent`
+records; :func:`audit_custody` is the machine check that no private shard
+ever moved.
 """
 from __future__ import annotations
 
@@ -101,6 +105,33 @@ def place(
     manifest = PlacementManifest(assignments=tuple(assigns))
     manifest.validate(by_id)
     return manifest
+
+
+@dataclasses.dataclass(frozen=True)
+class CustodyEvent:
+    """One auditable custody change in the device fleet.
+
+    ``kind``: "provision" (a device came up holding the shard), "rehome"
+    (a public shard's custodian died; a survivor took over), or
+    "quarantine" (a private shard's owner died; the bytes are tombstoned).
+    """
+
+    kind: str
+    shard_id: str
+    private: bool
+    src: Optional[str] = None     # previous custodian (None on provision)
+    dst: Optional[str] = None     # new custodian (None on quarantine)
+
+    def __post_init__(self):
+        if self.kind not in ("provision", "rehome", "quarantine"):
+            raise ValueError(f"unknown custody event kind {self.kind!r}")
+
+
+def audit_custody(log: Sequence[CustodyEvent]) -> Dict[str, int]:
+    """The paper's privacy claim over the custody log: private shards may be
+    provisioned (to their owner) or quarantined, NEVER re-homed."""
+    moved = sum(1 for e in log if e.private and e.kind == "rehome")
+    return {"private_shards_rehomed": moved}
 
 
 def leakage_report(

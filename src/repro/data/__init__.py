@@ -1,3 +1,4 @@
+"""Compat namespace: the data layer lives in :mod:`repro.storage` now."""
 from repro.data.pipeline import (
     DataConfig, PrivateShardStore, StannisDataset, make_stannis_dataset,
 )

@@ -1,166 +1,65 @@
-"""Deterministic synthetic data pipeline with private/public partitions.
+"""DEPRECATED-in-place: thin compat shim over :mod:`repro.storage`.
 
-Plays the role of the paper's TinyImageNet-on-flash: a corpus of token
-sequences split into *public* shards (shareable with every worker) and
-*private* shards (pinned to a home worker; never materialized elsewhere —
-enforced through the :class:`~repro.core.privacy.PlacementManifest`).
+The data layer moved into the ``repro.storage`` device-fleet subsystem
+(:class:`~repro.storage.StorageDevice` custody + :class:`~repro.storage.DeviceFleet`
+registry + three backends).  Every name this module used to define keeps
+working and now delegates to the synthetic storage backend:
 
-Synthetic-but-deterministic: sample ``i`` of shard ``s`` is a pure function of
-``(seed, s, i)``, so any worker reproduces ITS shards bit-exactly without any
-cross-worker I/O — the in-storage property, minus the flash.  Sequences are
-Zipf-distributed token ids with a linear-congruential position mix so the LM
-loss actually decreases during the end-to-end example runs.
+  * :class:`DataConfig`, :func:`synth_sequence` — canonical definitions now
+    live in :mod:`repro.storage.synthetic`; re-exported unchanged.
+  * :class:`PrivateShardStore` — a per-worker view backed by one
+    :class:`~repro.storage.SyntheticDevice` (same custody semantics: reading
+    a private shard from a non-owner raises ``PermissionError``).
+  * :class:`StannisDataset` — alias of :class:`~repro.storage.FleetBatcher`.
+  * :func:`make_stannis_dataset` — builds a synthetic
+    :class:`~repro.storage.DeviceFleet` under the hood.
 
-The batch iterator materializes the Stannis layout directly:
-  (global_rows, seq) group-major rows + (global_rows,) validity mask,
-with group g's valid rows drawn from g's assigned shards only.
+New code should import from :mod:`repro.storage` directly.
 """
 from __future__ import annotations
 
-import dataclasses
-import math
-import zlib
-from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.hetero import BatchSchedule
 from repro.core.load_balance import EpochPlan
 from repro.core.privacy import PlacementManifest, Shard
+from repro.storage.fleet import (
+    DeviceFleet, FleetBatcher, make_fleet_batcher, manifest_sources,
+)
+from repro.storage.synthetic import DataConfig, SyntheticDevice, synth_sequence
 
+__all__ = [
+    "DataConfig",
+    "PrivateShardStore",
+    "StannisDataset",
+    "make_stannis_dataset",
+    "manifest_sources",
+    "synth_sequence",
+]
 
-@dataclasses.dataclass(frozen=True)
-class DataConfig:
-    vocab: int
-    seq_len: int
-    seed: int = 0
-    zipf_a: float = 1.2      # token unigram skew
+# The batcher IS the old dataset (field-compatible: cfg / schedule /
+# group_workers / group_sources / _cursor / rewire / next_batch).
+StannisDataset = FleetBatcher
 
 
 class PrivateShardStore:
-    """Per-worker view of the corpus.  The ONLY object that can read a private
-    shard is the store constructed with the matching worker id (mirrors the
-    paper: only the CSD's ISP engine can see its flash)."""
+    """Per-worker view of the corpus, now one synthetic storage device.
+
+    Kept for the seed API: the ONLY object that can read a private shard is
+    the store constructed with the matching worker id (mirrors the paper:
+    only the CSD's ISP engine can see its flash).
+    """
 
     def __init__(self, worker: str, shards: Sequence[Shard], cfg: DataConfig):
         self.worker = worker
         self.cfg = cfg
-        self._shards = {s.shard_id: s for s in shards}
+        self._device = SyntheticDevice(worker, cfg)
+        self._device.provision(list(shards))
 
     def sample(self, shard_id: str, index: int) -> np.ndarray:
-        s = self._shards[shard_id]
-        if s.private and s.owner != self.worker:
-            raise PermissionError(
-                f"worker {self.worker!r} cannot read private shard {shard_id!r} "
-                f"(owner {s.owner!r})"
-            )
-        return synth_sequence(self.cfg, shard_id, index)
-
-
-def _mix(*vals: int) -> np.random.Generator:
-    return np.random.default_rng(np.array(vals, np.uint64))
-
-
-def synth_sequence(cfg: DataConfig, shard_id: str, index: int) -> np.ndarray:
-    """Deterministic (seed, shard, index) -> (seq_len+1,) int32 token ids.
-
-    Zipf unigram + LCG positional drift gives learnable low-entropy structure.
-    """
-    # crc32 (not hash()): stable across processes — workers must agree bit-exactly
-    h = zlib.crc32(shard_id.encode()) & 0x7FFFFFFF
-    rng = _mix(cfg.seed, h, index)
-    z = rng.zipf(cfg.zipf_a, size=cfg.seq_len + 1).astype(np.int64)
-    base = z % max(2, cfg.vocab // 4)
-    drift = (np.arange(cfg.seq_len + 1, dtype=np.int64) * (h % 97 + 1)) % 13
-    return ((base + drift) % cfg.vocab).astype(np.int32)
-
-
-@dataclasses.dataclass
-class StannisDataset:
-    """Batch iterator over the Stannis layout for one synchronous step.
-
-    groups: list of (worker_id, batch_size, [(shard_id, n_samples), ...]).
-    Yields dicts: tokens (R, S) int32, labels (R, S) int32,
-    loss_mask (R, S) f32 with invalid rows zeroed, row_mask (R,) f32.
-    """
-
-    cfg: DataConfig
-    schedule: BatchSchedule
-    group_workers: List[str]
-    group_sources: Dict[str, List[Tuple[str, int]]]   # worker -> shard draws
-    stores: Dict[str, PrivateShardStore]
-
-    def __post_init__(self):
-        self._cursor: Dict[str, int] = {w: 0 for w in self.group_workers}
-        # flatten each worker's sample space: (shard_id, index) pairs
-        self._space: Dict[str, List[Tuple[str, int]]] = {}
-        for w in self.group_workers:
-            pairs: List[Tuple[str, int]] = []
-            for shard_id, n in self.group_sources.get(w, []):
-                pairs.extend((shard_id, i) for i in range(n))
-            self._space[w] = pairs
-
-    def rewire(
-        self,
-        schedule: BatchSchedule,
-        group_sources: Dict[str, List[Tuple[str, int]]],
-    ) -> None:
-        """Re-point the iterator at a re-planned schedule + placement while
-        preserving per-worker epoch cursors (an online re-tune must not
-        replay already-seen samples)."""
-        cursors = dict(self._cursor)
-        self.schedule = schedule
-        self.group_sources = group_sources
-        self.__post_init__()
-        for w, c in cursors.items():
-            if w in self._cursor and self._space[w]:
-                self._cursor[w] = c % len(self._space[w])
-
-    def steps_per_epoch(self) -> int:
-        counts = [
-            len(self._space[w]) // max(1, b)
-            for w, b in zip(self.group_workers, self.schedule.group_batches)
-            if b > 0
-        ]
-        return min(counts) if counts else 0
-
-    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
-        while True:
-            yield self.next_batch()
-
-    def next_batch(self) -> Dict[str, np.ndarray]:
-        R = self.schedule.global_rows
-        S = self.cfg.seq_len
-        ml = self.schedule.max_local
-        tokens = np.zeros((R, S + 1), np.int32)
-        row_mask = self.schedule.row_mask()
-        for g, (w, b) in enumerate(
-            zip(self.group_workers, self.schedule.group_batches)
-        ):
-            space = self._space[w]
-            cur = self._cursor[w]
-            store = self.stores[w]
-            for r in range(b):
-                shard_id, idx = space[(cur + r) % max(1, len(space))]
-                tokens[g * ml + r] = store.sample(shard_id, idx)
-            self._cursor[w] = (cur + b) % max(1, len(space))
-        return {
-            "tokens": tokens[:, :-1],
-            "labels": tokens[:, 1:],
-            "loss_mask": row_mask[:, None] * np.ones((1, S), np.float32),
-            "row_mask": row_mask,
-        }
-
-
-def manifest_sources(
-    manifest: PlacementManifest, group_workers: List[str]
-) -> Dict[str, List[Tuple[str, int]]]:
-    """Per-worker (shard_id, n_samples) draws from a placement manifest."""
-    sources: Dict[str, List[Tuple[str, int]]] = {w: [] for w in group_workers}
-    for a in manifest.assignments:
-        if a.worker in sources:
-            sources[a.worker].append((a.shard_id, a.n_samples))
-    return sources
+        return self._device.read(shard_id, index)
 
 
 def make_stannis_dataset(
@@ -173,15 +72,10 @@ def make_stannis_dataset(
 ) -> StannisDataset:
     """Wire the Eq.1 plan + privacy manifest into a batch iterator.
 
-    Each worker's sample sources come from its manifest assignments; duplicated
-    private samples (the paper's remedy) appear as a second pass over the same
-    shard (indices wrap in ``next_batch``).
+    Seed-compatible constructor: provisions a synthetic device fleet for
+    ``group_workers`` and returns the fleet-fed batcher.  Duplicated private
+    samples (the paper's remedy) appear as a second pass over the same shard
+    (indices wrap in ``next_batch``).
     """
-    sources = manifest_sources(manifest, group_workers)
-    stores = {
-        w: PrivateShardStore(w, shards, cfg) for w in group_workers
-    }
-    return StannisDataset(
-        cfg=cfg, schedule=schedule, group_workers=group_workers,
-        group_sources=sources, stores=stores,
-    )
+    fleet = DeviceFleet.provision(group_workers, shards, cfg)
+    return make_fleet_batcher(cfg, schedule, group_workers, manifest, fleet)

@@ -27,6 +27,8 @@ from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.compat import axis_size
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.kernels import ops as kops
@@ -48,7 +50,7 @@ def ring_allreduce(x: jax.Array, axis: str) -> jax.Array:
     2(n-1)/n of the payload, the bandwidth-optimal schedule the paper's
     Horovod uses.
     """
-    n = jax.lax.axis_size(axis)
+    n = axis_size(axis)
     if n == 1:
         return x
     idx = jax.lax.axis_index(axis)
@@ -97,7 +99,7 @@ def hierarchical_allreduce(
     fleet-scale schedule, here explicit so the roofline's collective term can
     attribute bytes to the right fabric.
     """
-    n_intra = jax.lax.axis_size(intra_axis)
+    n_intra = axis_size(intra_axis)
     size = x.shape[0]
     pad = (-size) % n_intra
     if pad:

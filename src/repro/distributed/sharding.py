@@ -16,6 +16,8 @@ from typing import Any, Dict, Optional, Sequence, Tuple, Union
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import constraint_sharding, get_abstract_mesh
+
 PyTree = Any
 MeshAxes = Union[None, str, Tuple[str, ...]]
 
@@ -186,13 +188,10 @@ def with_logical_constraint(x: jax.Array, *axes: Optional[str]) -> jax.Array:
     """``with_sharding_constraint`` by logical axis names; no-op outside a mesh."""
     if not _CONSTRAIN:
         return x
-    try:
-        mesh = jax.sharding.get_abstract_mesh()
-        if mesh is None or mesh.empty:
-            return x
-        axis_names = set(mesh.axis_names)
-    except Exception:
+    mesh = get_abstract_mesh()
+    if mesh is None:
         return x
+    axis_names = set(mesh.axis_names)
     spec = spec_for(tuple(axes), _CURRENT_RULES)
     # Drop references to mesh axes that don't exist in the current (small) mesh.
     clean = []
@@ -205,6 +204,8 @@ def with_logical_constraint(x: jax.Array, *axes: Optional[str]) -> jax.Array:
             kept = tuple(a for a in part if a in axis_names)
             clean.append(kept if kept else None)
     try:
-        return jax.lax.with_sharding_constraint(x, P(*clean))
+        return jax.lax.with_sharding_constraint(
+            x, constraint_sharding(mesh, P(*clean))
+        )
     except Exception:
         return x

@@ -8,21 +8,26 @@ Production target: TPU v5e pods, 16x16 = 256 chips per pod.
   multi-pod:  ("pod", "data", "model") = (2, 16, 16) = 512 chips
 Stannis dp-groups live along ("pod", "data"); tensor/expert parallel along
 "model".
+
+``make_host_mesh`` is the CPU-device mesh the storage layer's
+:class:`~repro.storage.meshfeed.MeshFeedDevice` backend feeds per-dp-group
+batches onto (smoke tests force N host devices via
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from repro.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(
@@ -30,10 +35,18 @@ def make_host_mesh(
 ) -> Mesh:
     """Small mesh over however many (CPU) devices exist — smoke tests."""
     n = len(jax.devices())
-    assert data * model <= n, (data, model, n)
-    return jax.make_mesh(
-        (data, model), axis_names, axis_types=(AxisType.Auto,) * 2
-    )
+    if data < 1 or model < 1:
+        raise ValueError(
+            f"mesh axes must be positive, got data={data}, model={model}"
+        )
+    if data * model > n:
+        raise ValueError(
+            f"host mesh ({data} x {model}) needs {data * model} devices "
+            f"but only {n} are available; set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={data * model} "
+            f"or shrink the mesh"
+        )
+    return make_mesh((data, model), axis_names)
 
 
 # Hardware constants (TPU v5e-class) used by the roofline analysis.

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 from repro.api import FleetSpec, Session, SessionConfig
 from repro.configs import ARCHS, get_config, smoke_config
 from repro.core.tuner import measured_benchmark
-from repro.data.pipeline import DataConfig
+from repro.storage import DataConfig
 from repro.models.api import get_model
 from repro.optim import adamw, sgd_momentum
 

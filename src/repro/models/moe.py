@@ -55,12 +55,11 @@ MOE_IMPL = _os.environ.get("REPRO_MOE_IMPL", "auto")
 def moe_mlp(p: Dict, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
     """x: (B, S, d) -> (out, aux_loss); dispatches on MOE_IMPL."""
     if MOE_IMPL == "auto":
-        try:
-            mesh = jax.sharding.get_abstract_mesh()
-        except Exception:
-            mesh = None
+        from repro.compat import get_abstract_mesh
+
+        mesh = get_abstract_mesh()
         if (
-            mesh is not None and not mesh.empty
+            mesh is not None
             and "model" in mesh.axis_names and mesh.shape["model"] > 1
             and cfg.n_experts % mesh.shape["model"] == 0
         ):

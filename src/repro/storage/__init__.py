@@ -1,0 +1,58 @@
+"""`repro.storage` — computational storage as a first-class subsystem.
+
+STANNIS's central claim is that training happens *inside* the storage
+devices: private data never crosses the device boundary, public data is
+shared deliberately, and the host *places work onto* devices rather than
+reading bytes out of them.  This package is that device model:
+
+    CSD (paper)            repro.storage (here)
+    -------------------    ------------------------------------------
+    NAND flash + shards    StorageDevice custody table (Shard set)
+    ISP engine             in-device read()/assemble() sampling
+    NVMe boundary          PermissionError custody guard
+    rack of CSDs           DeviceFleet (worker id -> device registry)
+    device failure         quarantine_workers: public re-homes,
+                           private tombstones (CustodyEvent log)
+    host DMA / fabric      FleetBatcher.next_device_batch delivery
+
+Three interchangeable backends (select via ``StorageSpec`` /
+``FleetSpec.with_storage``):
+
+  * ``synthetic`` — deterministic in-silico corpus, zero setup (default).
+  * ``flash``     — memory-mapped file-backed shards, bit-identical to
+    synthetic; models the paper's flash medium.
+  * ``meshfeed``  — per-dp-group buffers placed directly onto a
+    ``jax.sharding.Mesh`` (batches are born sharded).
+
+``Session`` pulls training batches through a :class:`FleetBatcher`, and all
+elastic custody changes route through the fleet API — see
+:mod:`repro.storage.fleet`.
+"""
+from repro.storage.device import BaseStorageDevice, StorageDevice
+from repro.storage.flash import FlashDevice
+from repro.storage.fleet import (
+    BACKENDS, DeviceFleet, DeviceRecord, FleetBatcher, FleetManifest,
+    StorageSpec, make_fleet_batcher, manifest_sources,
+)
+from repro.storage.meshfeed import MeshFeedDevice, MeshFeeder, data_axis_size
+from repro.storage.synthetic import DataConfig, SyntheticDevice, synth_sequence
+
+__all__ = [
+    "BACKENDS",
+    "BaseStorageDevice",
+    "DataConfig",
+    "DeviceFleet",
+    "DeviceRecord",
+    "FlashDevice",
+    "FleetBatcher",
+    "FleetManifest",
+    "MeshFeedDevice",
+    "MeshFeeder",
+    "StorageDevice",
+    "StorageSpec",
+    "SyntheticDevice",
+    "data_axis_size",
+    "make_fleet_batcher",
+    "manifest_sources",
+    "synth_sequence",
+]

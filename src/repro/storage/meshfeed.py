@@ -1,0 +1,103 @@
+"""`MeshFeedDevice`: per-dp-group feeding onto a real `jax.sharding.Mesh`.
+
+The first two backends hand the Session one host-side global batch that jit
+then scatters — fine on one device, but it re-stages the whole batch through
+device 0 on a real mesh.  This backend models what a rack of CSDs actually
+does: each device assembles ITS dp-group's rows locally, and the host never
+holds more than views; the global array is stitched together from
+per-device shards via :func:`jax.make_array_from_single_device_arrays`
+(the multi-host feeding idiom), already laid out along the mesh's ``data``
+axis.  This wires :func:`repro.launch.mesh.make_host_mesh` into the
+training path: ``Session.run()`` consumes batches that are *born sharded*.
+
+Device ↔ mesh mapping: the global Stannis batch is ``(n_groups *
+max_local, seq)`` group-major.  The feed splits those rows into
+``data_axis_size`` contiguous chunks — one per mesh device along ``data`` —
+so dp-group g's rows land on the mesh slice that computes group g.  The
+``data`` axis is the largest divisor of ``global_rows`` that fits the
+available devices (a 1-device CPU degrades to data=1 and stays correct,
+which is how the unit-test process runs; the multi-device path is exercised
+under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+
+Sampling custody is inherited from :class:`SyntheticDevice` — mesh feeding
+changes where batches *land*, never who may *read* a shard.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.storage.synthetic import SyntheticDevice
+
+
+class MeshFeedDevice(SyntheticDevice):
+    """Synthetic sampling + mesh-placed batch delivery (see module doc)."""
+
+    backend = "meshfeed"
+
+
+def data_axis_size(global_rows: int, n_devices: int) -> int:
+    """Largest divisor of ``global_rows`` that fits the device count."""
+    if global_rows <= 0:
+        return 1
+    for d in range(min(n_devices, global_rows), 0, -1):
+        if global_rows % d == 0:
+            return d
+    return 1
+
+
+class MeshFeeder:
+    """Builds (and re-builds, when the row count changes across elastic
+    events) the host mesh, and feeds host batches onto it per-shard."""
+
+    def __init__(self, data_axis: Optional[int] = None):
+        self._forced = data_axis
+        self._mesh = None
+        self._rows = None
+
+    def mesh_for(self, global_rows: int):
+        import jax
+
+        from repro.launch.mesh import make_host_mesh
+
+        if self._mesh is None or self._rows != global_rows:
+            d = self._forced or data_axis_size(global_rows, len(jax.devices()))
+            if global_rows % d != 0:
+                raise ValueError(
+                    f"data axis {d} does not divide global_rows {global_rows}"
+                )
+            self._mesh = make_host_mesh(data=d, model=1)
+            self._rows = global_rows
+        return self._mesh
+
+    @property
+    def n_feed_devices(self) -> int:
+        return 0 if self._mesh is None else int(self._mesh.shape["data"])
+
+    def feed(self, batch: Dict[str, np.ndarray]) -> Dict:
+        """Place row-major host arrays onto the mesh, sharded over ``data``.
+
+        Each mesh device receives only its own row chunk (``device_put`` of
+        a view), then the global array is assembled from the single-device
+        shards — no full-batch staging through device 0.
+        """
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        rows = next(iter(batch.values())).shape[0]
+        mesh = self.mesh_for(rows)
+        d = int(mesh.shape["data"])
+        devices = mesh.devices.reshape(-1)
+        chunk = rows // d
+        out: Dict[str, jax.Array] = {}
+        for k, v in batch.items():
+            sharding = NamedSharding(mesh, P("data", *([None] * (v.ndim - 1))))
+            shards = [
+                jax.device_put(v[i * chunk:(i + 1) * chunk], dev)
+                for i, dev in enumerate(devices)
+            ]
+            out[k] = jax.make_array_from_single_device_arrays(
+                v.shape, sharding, shards
+            )
+        return out

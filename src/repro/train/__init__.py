@@ -1,4 +1,6 @@
+"""Training steps.  The old ``Trainer`` entry point is gone — construct a
+:class:`repro.api.Session` instead (``repro.train.trainer`` holds the
+raising stub with the migration map)."""
 from repro.train.steps import loss_fn, make_serve_step, make_train_step
-from repro.train.trainer import Trainer, TrainerConfig
 
-__all__ = ["loss_fn", "make_train_step", "make_serve_step", "Trainer", "TrainerConfig"]
+__all__ = ["loss_fn", "make_train_step", "make_serve_step"]

@@ -1,149 +1,47 @@
-"""DEPRECATED shim: ``Trainer`` now delegates to :class:`repro.api.Session`.
+"""REMOVED: ``Trainer`` is a raising stub — use :class:`repro.api.Session`.
 
-The staged Session API (``session.tune() -> .plan() -> .place() ->
-.compile() -> .run()``) replaced the monolithic ``setup()``/``train()``
-pipeline; new code should construct a Session directly:
+PR 1 replaced the monolithic ``Trainer`` with the staged Session API and
+left a behavior-compatible delegation shim here; this PR finishes the
+deprecation.  Instantiating ``Trainer`` now raises ``DeprecationWarning``
+with the migration recipe instead of silently forwarding, so stale call
+sites fail loudly at construction (not subtly at behavior drift).
 
-    from repro.api import Session, SessionConfig, FleetSpec
+Migration map (old -> new):
 
-This shim keeps the seed surface alive — ``setup``, ``train``, ``retune``,
-``drop_workers`` and the ``tune_result``/``schedule``/``plan``/``manifest``/
-``dataset``/``shards`` attributes — by forwarding everything to a Session.
-``drop_workers`` and ``retune`` now route through the unified
-``Session.apply(FleetEvent)`` path, which fixes the seed bug where a node
-loss rebuilt the :class:`~repro.core.hetero.BatchSchedule` without the
-pinned ``capacity`` and forced an avoidable recompile.
+    Trainer(model, optimizer, fleet, data_cfg, cfg, shards)
+        -> Session(model=..., optimizer=..., fleet=..., data=...,
+                   shards=..., config=SessionConfig(...))
+    .setup()                    -> session.tune(); session.plan();
+                                   session.place()   (stages are lazy:
+                                   session.run() alone also works)
+    .train(params, steps=N)     -> session.run(params, steps=N)
+    .retune()                   -> session.apply(DriftDetected())
+    .drop_workers([w])          -> session.apply(WorkerLost([w]))
+    .schedule / .plan / .manifest / .dataset
+        -> session.tune().schedule / session.plan() / session.place()
+           / session.dataset
 """
 from __future__ import annotations
 
-import dataclasses
-import warnings
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from repro.api.session import SessionConfig
 
-from repro.api.events import DriftDetected, WorkerLost
-from repro.api.session import Session, SessionConfig
-from repro.core.hetero import BatchSchedule
-from repro.core.load_balance import EpochPlan
-from repro.core.privacy import PlacementManifest, Shard
-from repro.core.topology import Fleet
-from repro.core.tuner import TuneResult
-from repro.data.pipeline import DataConfig, StannisDataset
-from repro.models.api import Model
-from repro.optim.optimizers import Optimizer
-
-PyTree = Any
+_HINT = (
+    "repro.train.trainer.Trainer was removed; use repro.api.Session:\n"
+    "    from repro.api import Session, SessionConfig, FleetSpec\n"
+    "    session = Session(model=model, optimizer=opt, fleet=fleet,\n"
+    "                      data=data_cfg, shards=shards,\n"
+    "                      config=SessionConfig(...))\n"
+    "    report = session.run()\n"
+    "See repro/train/trainer.py's docstring for the full migration map."
+)
 
 
-@dataclasses.dataclass
 class TrainerConfig(SessionConfig):
-    """Deprecated alias of :class:`repro.api.SessionConfig`."""
+    """Deprecated alias kept importable so old configs migrate in place."""
 
 
-@dataclasses.dataclass
 class Trainer:
-    """Deprecated: use :class:`repro.api.Session`."""
+    """Raising stub — see the module docstring for the migration map."""
 
-    model: Model
-    optimizer: Optimizer
-    fleet: Fleet
-    data_cfg: DataConfig
-    cfg: TrainerConfig
-    shards: Sequence[Shard]
-    benchmark: Optional[Callable[[str, int], float]] = None
-
-    session: Optional[Session] = None
-
-    def __post_init__(self):
-        warnings.warn(
-            "repro.train.trainer.Trainer is deprecated; use repro.api.Session",
-            DeprecationWarning,
-            stacklevel=3,
-        )
-
-    def _session(self) -> Session:
-        if self.session is None:
-            self.session = Session(
-                model=self.model,
-                optimizer=self.optimizer,
-                fleet=self.fleet,
-                data=self.data_cfg,
-                shards=list(self.shards),
-                config=self.cfg,
-                benchmark=self.benchmark,
-            )
-        return self.session
-
-    # -- seed attribute surface (all derived from session artifacts) -------
-
-    @property
-    def tune_result(self) -> Optional[TuneResult]:
-        s = self._session()
-        return s.tune().result if s.cached("tune") else None
-
-    @property
-    def schedule(self) -> Optional[BatchSchedule]:
-        s = self._session()
-        return s.tune().schedule if s.cached("tune") else None
-
-    @property
-    def group_workers(self) -> Optional[List[str]]:
-        s = self._session()
-        return list(s.tune().group_workers) if s.cached("tune") else None
-
-    @property
-    def plan(self) -> Optional[EpochPlan]:
-        s = self._session()
-        return s.plan() if s.cached("plan") else None
-
-    @property
-    def manifest(self) -> Optional[PlacementManifest]:
-        s = self._session()
-        return s.place() if s.cached("place") else None
-
-    @property
-    def dataset(self) -> StannisDataset:
-        return self._session().dataset
-
-    # -- seed method surface -----------------------------------------------
-
-    def setup(self) -> "Trainer":
-        s = self._session()
-        s.tune()
-        s.plan()
-        s.place()
-        _ = s.dataset
-        return self
-
-    def train(
-        self,
-        params: Optional[PyTree] = None,
-        *,
-        steps: Optional[int] = None,
-        on_metrics: Optional[Callable[[int, Dict], None]] = None,
-    ) -> Tuple[PyTree, List[Dict[str, float]]]:
-        s = self._session()
-        remove = None
-        if on_metrics is not None:
-            remove = s.callbacks.on_step(on_metrics)
-        try:
-            report = s.run(params, steps=steps)
-        finally:
-            if remove is not None:
-                s.callbacks.remove_on_step(remove)
-        return report.params, list(report.history)
-
-    def retune(self) -> None:
-        """Online re-tune: new batch shares, same shapes => no recompilation."""
-        self._session().apply(DriftDetected(source="manual"))
-
-    def drop_workers(self, dead: Sequence[str]) -> None:
-        """Node failure (paper's backfill/duplication remedy), routed through
-        the unified ``Session.apply(WorkerLost)`` replanning path.
-
-        Seed parity: unknown / already-dropped names are ignored (failure
-        detectors double-report), where the Session API itself is strict."""
-        s = self._session()
-        known = [w for w in dead if w in s.tune().group_workers]
-        if known:
-            s.apply(WorkerLost(known))
-        self.shards = list(s.shards)
+    def __init__(self, *args, **kwargs):
+        raise DeprecationWarning(_HINT)

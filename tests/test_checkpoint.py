@@ -100,14 +100,15 @@ def test_elastic_reshard_subprocess(tmp_path, tree):
     env["PYTHONPATH"] = os.path.join(repo, "src")
     code = f"""
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.compat import make_mesh
         from repro.checkpoint.manager import restore
         like = {{
             "params": {{"w": jnp.zeros((8, 16)), "b": jnp.zeros(16)}},
             "opt": {{"mu": jnp.zeros((8, 16)), "step": jnp.int32(0)}},
         }}
         for dp in (8, 4, 2):
-            mesh = jax.make_mesh((dp,), ("data",), axis_types=(AxisType.Auto,))
+            mesh = make_mesh((dp,), ("data",))
             sh = {{
                 "params": {{"w": NamedSharding(mesh, P("data", None)),
                            "b": NamedSharding(mesh, P())}},

@@ -38,10 +38,11 @@ def _run_with_devices(code: str, n: int = 8) -> str:
 def test_ring_allreduce_equals_psum():
     out = _run_with_devices("""
         import jax, jax.numpy as jnp
-        from jax.sharding import PartitionSpec as P, AxisType
+        from jax.sharding import PartitionSpec as P
         from jax.experimental.shard_map import shard_map
+        from repro.compat import make_mesh
         from repro.distributed.allreduce import ring_allreduce
-        mesh = jax.make_mesh((8,), ('data',), axis_types=(AxisType.Auto,))
+        mesh = make_mesh((8,), ('data',))
         x = jax.random.normal(jax.random.PRNGKey(0), (8, 1037))
         ring = shard_map(lambda v: ring_allreduce(v[0], 'data')[None], mesh=mesh,
                          in_specs=P('data'), out_specs=P('data'), check_rep=False)
@@ -57,10 +58,11 @@ def test_ring_allreduce_equals_psum():
 def test_hierarchical_allreduce_equals_sum():
     out = _run_with_devices("""
         import jax, jax.numpy as jnp
-        from jax.sharding import PartitionSpec as P, AxisType
+        from jax.sharding import PartitionSpec as P
         from jax.experimental.shard_map import shard_map
+        from repro.compat import make_mesh
         from repro.distributed.allreduce import hierarchical_allreduce
-        mesh = jax.make_mesh((2, 4), ('pod', 'data'), axis_types=(AxisType.Auto,)*2)
+        mesh = make_mesh((2, 4), ('pod', 'data'))
         x = jax.random.normal(jax.random.PRNGKey(1), (2, 4, 515))
         f = shard_map(
             lambda v: hierarchical_allreduce(v[0, 0], intra_axis='data',
@@ -77,10 +79,11 @@ def test_hierarchical_allreduce_equals_sum():
 def test_compressed_allreduce_error_feedback():
     out = _run_with_devices("""
         import jax, jax.numpy as jnp
-        from jax.sharding import PartitionSpec as P, AxisType
+        from jax.sharding import PartitionSpec as P
         from jax.experimental.shard_map import shard_map
+        from repro.compat import make_mesh
         from repro.distributed.allreduce import compressed_allreduce
-        mesh = jax.make_mesh((4,), ('data',), axis_types=(AxisType.Auto,))
+        mesh = make_mesh((4,), ('data',))
         key = jax.random.PRNGKey(2)
         x = jax.random.normal(key, (4, 4096))
         noise = jax.random.uniform(jax.random.fold_in(key, 1), (4, 4096))
@@ -106,9 +109,9 @@ def test_compressed_allreduce_error_feedback():
 def test_pipeline_matches_sequential():
     out = _run_with_devices("""
         import jax, jax.numpy as jnp
+        from repro.compat import make_mesh
         from repro.distributed.pipeline import pipeline_apply
-        mesh = jax.make_mesh((4,), ('stage',),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((4,), ('stage',))
         key = jax.random.PRNGKey(0)
         S, M, mb, d = 4, 8, 2, 16
         Ws = jax.random.normal(key, (S, d, d)) * 0.3

@@ -28,7 +28,7 @@ def _run(code: str, n: int = 4) -> str:
 def test_local_dispatch_matches_dense_forward_and_grad():
     out = _run("""
         import jax, jax.numpy as jnp
-        from jax.sharding import AxisType
+        from repro.compat import make_mesh, set_mesh
         from repro.configs import smoke_config
         from repro.models import moe
         from repro.models.api import get_model
@@ -52,10 +52,9 @@ def test_local_dispatch_matches_dense_forward_and_grad():
         ref, aux_ref = jax.jit(lambda p, t: m.forward(p, t))(params, batch['tokens'])
         _, _, m1 = jax.jit(step)(params, opt.init(params), batch)
 
-        mesh = jax.make_mesh((2, 2), ('data', 'model'),
-                             axis_types=(AxisType.Auto,) * 2)
+        mesh = make_mesh((2, 2), ('data', 'model'))
         moe.MOE_IMPL = 'auto'
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             out, aux = jax.jit(lambda p, t: m.forward(p, t))(params, batch['tokens'])
             _, _, m2 = jax.jit(step)(params, opt.init(params), batch)
 
@@ -77,7 +76,7 @@ def test_local_dispatch_over_model_batch_layout():
     all-gather + psum_scatter path must also match."""
     out = _run("""
         import jax, jax.numpy as jnp
-        from jax.sharding import AxisType
+        from repro.compat import make_mesh, set_mesh
         from repro.configs import smoke_config
         from repro.distributed.sharding import make_rules, set_rules
         from repro.models import moe
@@ -92,12 +91,11 @@ def test_local_dispatch_over_model_batch_layout():
         moe.MOE_IMPL = 'dense'
         ref, _ = jax.jit(lambda p, t: m.forward(p, t))(params, tokens)
 
-        mesh = jax.make_mesh((2, 2), ('data', 'model'),
-                             axis_types=(AxisType.Auto,) * 2)
+        mesh = make_mesh((2, 2), ('data', 'model'))
         rules = make_rules(extra={'batch': ('pod', 'data', 'model')})
         set_rules(rules)
         moe.MOE_IMPL = 'auto'
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             out, _ = jax.jit(lambda p, t: m.forward(p, t))(params, tokens)
         set_rules(make_rules())
         err = float(jnp.max(jnp.abs(out - ref)))

@@ -1,7 +1,7 @@
 """Session API contract: staged frozen/cached artifacts, the unified
 elastic-event path (WorkerLost == old drop_workers semantics; DriftDetected
 keeps compiled shapes — compile-count probe), the callback registry, and the
-Trainer shim's behavior parity on a smoke config."""
+fleet-aware placement manifest."""
 import dataclasses
 
 import numpy as np
@@ -330,63 +330,35 @@ def test_fleetspec_immutable_builder():
 
 
 # ---------------------------------------------------------------------------
-# Trainer shim parity
+# fleet-aware placement manifest
 # ---------------------------------------------------------------------------
 
 
-def test_trainer_shim_is_behavior_identical_smoke():
-    from repro.train.trainer import Trainer, TrainerConfig
+def test_place_returns_fleet_manifest():
+    from repro.core.privacy import PlacementManifest
+    from repro.storage import FleetManifest
 
-    cfg = smoke_config("deepseek-7b")
-    spec = FleetSpec.demo(2)
-    kwargs = dict(
-        model=get_model(cfg),
-        optimizer=adamw(),
-        fleet=spec.build(),
-        data_cfg=DataConfig(vocab=cfg.vocab, seq_len=16),
-        cfg=TrainerConfig(total_steps=3),
-        shards=spec.shards(private_per_worker={"csd": 64}, public=4096),
-    )
-    with pytest.warns(DeprecationWarning):
-        tr = Trainer(**kwargs).setup()
-    # shim surface mirrors the session artifacts
-    assert tr.tune_result is tr.session.tune().result
-    assert tr.schedule is tr.session.tune().schedule
-    assert tr.manifest is tr.session.place()
-    _, hist = tr.train()
-    assert len(hist) == 3 and np.isfinite(hist[-1]["loss"])
-
-    # the shim's trajectory matches a bare Session run step for step
-    s = _session(n_csds=2, steps=3)
-    report = s.run()
-    np.testing.assert_allclose(
-        [h["loss"] for h in hist],
-        [h["loss"] for h in report.history],
-        rtol=1e-5,
-    )
+    s = _session(n_csds=2)
+    m = s.place()
+    assert isinstance(m, FleetManifest)
+    assert isinstance(m, PlacementManifest)      # the core surface survives
+    assert m.backend == "synthetic"
+    workers = {d.worker for d in m.devices}
+    assert workers == set(s.tune().group_workers)
+    # every device's custody covers its own private shard
+    for sh in s.shards:
+        if sh.private:
+            rec = m.device_for(sh.owner)
+            assert rec is not None and sh.shard_id in rec.custody
 
 
-def test_trainer_shim_drop_workers_via_event_path():
-    from repro.train.trainer import Trainer, TrainerConfig
-
-    cfg = smoke_config("deepseek-7b")
-    spec = FleetSpec.demo(3)
-    tr = Trainer(
-        model=get_model(cfg),
-        optimizer=adamw(),
-        fleet=spec.build(),
-        data_cfg=DataConfig(vocab=cfg.vocab, seq_len=16),
-        cfg=TrainerConfig(total_steps=2),
-        shards=spec.shards(private_per_worker={"csd": 64}, public=4096),
-    ).setup()
-    max_local = tr.schedule.max_local
-    tr.drop_workers(["csd/0"])
-    assert tr.schedule.max_local == max_local   # the capacity fix
-    assert all(sh.owner != "csd/0" for sh in tr.shards if sh.private)
-    # seed parity: double-reporting a dead worker is a no-op, not a crash
-    n_groups = tr.schedule.n_groups
-    tr.drop_workers(["csd/0", "nope/9"])
-    assert tr.schedule.n_groups == n_groups
-    # seed parity: configs stay mutable
-    tr.cfg.total_steps = 5
-    assert tr.cfg.total_steps == 5
+def test_worker_lost_manifest_reflects_quarantine():
+    s = _session(n_csds=3)
+    s.place()
+    s.apply(WorkerLost(["csd/1"]))
+    m = s.place()
+    assert "private-csd/1" in m.quarantined
+    assert m.device_for("csd/1") is None
+    # no assignment may reference the dead worker or its shard
+    assert all(a.worker != "csd/1" for a in m.assignments)
+    assert all(a.shard_id != "private-csd/1" for a in m.assignments)

@@ -1,0 +1,286 @@
+"""Storage subsystem: custody enforcement on EVERY backend, synthetic/flash
+bit-identity, WorkerLost re-homing (public moves, private quarantines), the
+meshfeed mesh, and the multi-device session smoke."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core.privacy import Shard, audit_custody
+from repro.storage import (
+    BACKENDS, DataConfig, DeviceFleet, FlashDevice, FleetManifest,
+    StorageSpec, SyntheticDevice, data_axis_size, synth_sequence,
+)
+
+from _hypothesis_compat import given, settings, st
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+CFG = DataConfig(vocab=128, seq_len=8, seed=3)
+
+
+def _spec(backend, tmp_path):
+    if backend == "flash":
+        return StorageSpec(backend="flash", root=str(tmp_path / "spool"))
+    return StorageSpec(backend=backend)
+
+
+def _fleet(backend, tmp_path, workers=("w0", "w1")):
+    shards = [
+        Shard("priv-w0", 6, True, "w0"),
+        Shard("priv-w1", 6, True, "w1"),
+        Shard("pub", 12, False),
+    ]
+    return DeviceFleet.provision(
+        list(workers), shards, CFG, spec=_spec(backend, tmp_path)
+    )
+
+
+# ---------------------------------------------------------------------------
+# custody: the PermissionError guard, on every backend
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", sorted(BACKENDS))
+def test_cross_worker_private_read_raises(backend, tmp_path):
+    fleet = _fleet(backend, tmp_path)
+    d0, d1 = fleet.device("w0"), fleet.device("w1")
+    assert d0.read("priv-w0", 0).shape == (CFG.seq_len + 1,)   # owner: fine
+    assert d1.read("pub", 0) is not None                       # public: fine
+    with pytest.raises(PermissionError):
+        d1.read("priv-w0", 0)                                  # refused
+    with pytest.raises(PermissionError):
+        d0.read("priv-w1", 0)
+    with pytest.raises(KeyError):
+        d0.read("nope", 0)                                     # unknown != denied
+
+
+@pytest.mark.parametrize("backend", sorted(BACKENDS))
+def test_assemble_is_custody_checked(backend, tmp_path):
+    fleet = _fleet(backend, tmp_path)
+    with pytest.raises(PermissionError):
+        fleet.device("w1").assemble([("pub", 0), ("priv-w0", 1)])
+
+
+# ---------------------------------------------------------------------------
+# synthetic <-> flash bit-identity
+# ---------------------------------------------------------------------------
+
+
+def test_flash_matches_synthetic_bit_exact(tmp_path):
+    fleet_s = _fleet("synthetic", tmp_path)
+    fleet_f = _fleet("flash", tmp_path)
+    for sid, n in (("priv-w0", 6), ("pub", 12)):
+        for i in range(n):
+            np.testing.assert_array_equal(
+                fleet_s.device("w0").read(sid, i),
+                fleet_f.device("w0").read(sid, i),
+            )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    shard=st.text(alphabet="abcxyz/-", min_size=1, max_size=12),
+    index=st.integers(min_value=0, max_value=63),
+)
+def test_flash_synthetic_bit_identity_property(seed, shard, index, tmp_path_factory):
+    """For ANY (seed, shard, index): flash pages == synthetic generation."""
+    cfg = DataConfig(vocab=512, seq_len=12, seed=seed)
+    root = str(tmp_path_factory.mktemp("flash-prop"))
+    sh = Shard(shard, index + 1, False)
+    syn = SyntheticDevice("w", cfg)
+    syn.provision([sh])
+    fl = FlashDevice("w", cfg, root=root)
+    fl.provision([sh])
+    np.testing.assert_array_equal(syn.read(shard, index), fl.read(shard, index))
+    np.testing.assert_array_equal(
+        syn.read(shard, index), synth_sequence(cfg, shard, index)
+    )
+
+
+@pytest.mark.parametrize("backend", sorted(BACKENDS))
+def test_batcher_output_identical_across_backends(backend, tmp_path):
+    """The training math must not depend on the storage medium."""
+    from repro.core.hetero import BatchSchedule
+    from repro.storage import FleetBatcher
+
+    ref = _fleet("synthetic", tmp_path)
+    other = _fleet(backend, tmp_path)
+    kw = dict(
+        cfg=CFG, schedule=BatchSchedule((2, 3)), group_workers=["w0", "w1"],
+        group_sources={"w0": [("priv-w0", 6), ("pub", 4)],
+                       "w1": [("priv-w1", 6), ("pub", 4)]},
+    )
+    a = FleetBatcher(fleet=ref, **kw)
+    b = FleetBatcher(fleet=other, **kw)
+    for _ in range(3):
+        ba, bb = a.next_batch(), b.next_batch()
+        np.testing.assert_array_equal(ba["tokens"], bb["tokens"])
+        np.testing.assert_array_equal(ba["labels"], bb["labels"])
+        np.testing.assert_array_equal(ba["loss_mask"], bb["loss_mask"])
+
+
+# ---------------------------------------------------------------------------
+# WorkerLost re-homing: public moves, private quarantines — every backend
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", sorted(BACKENDS))
+def test_worker_lost_rehomes_public_quarantines_private(backend, tmp_path):
+    fleet = _fleet(backend, tmp_path, workers=("w0", "w1", "w2"))
+    assert fleet.custodian("pub") == "w0"       # first provisioned worker
+    dropped = fleet.quarantine_workers(["w0"])
+    assert dropped == ("priv-w0",)
+    assert fleet.workers == ("w1", "w2")
+    # public custody re-homed to a survivor
+    assert fleet.custodian("pub") in ("w1", "w2")
+    # the dead worker's private shard is tombstoned on EVERY survivor:
+    # a PermissionError, never bytes, never a silent KeyError
+    for w in fleet.workers:
+        with pytest.raises(PermissionError, match="quarantined"):
+            fleet.device(w).read("priv-w0", 0)
+    # survivors' own private shards are untouched
+    fleet.device("w1").read("priv-w1", 0)
+    # and the audit proves no private shard ever moved
+    assert audit_custody(fleet.custody_log) == {"private_shards_rehomed": 0}
+    kinds = {(e.kind, e.shard_id) for e in fleet.custody_log}
+    assert ("quarantine", "priv-w0") in kinds
+    assert ("rehome", "pub") in kinds
+
+
+def test_flash_quarantine_shreds_the_file(tmp_path):
+    fleet = _fleet("flash", tmp_path, workers=("w0", "w1"))
+    dev0 = fleet.device("w0")
+    dev0.read("priv-w0", 0)                     # spools the file
+    shard = next(s for s in fleet.shards if s.shard_id == "priv-w0")
+    path = dev0._shard_path(shard)
+    assert os.path.exists(path)
+    # losing w0 through the REAL fleet path shreds its flash: the private
+    # bytes cease to exist on disk, not just in the custody table
+    fleet.quarantine_workers(["w0"])
+    assert not os.path.exists(path)
+
+
+@pytest.mark.parametrize("backend", sorted(BACKENDS))
+def test_joiner_inherits_tombstones(backend, tmp_path):
+    """A worker provisioned AFTER a quarantine must still refuse the dead
+    shard (late joiners cannot resurrect dead data)."""
+    fleet = _fleet(backend, tmp_path, workers=("w0", "w1"))
+    fleet.quarantine_workers(["w0"])
+    dev = fleet.provision_worker("w9")
+    with pytest.raises(PermissionError, match="quarantined"):
+        dev.read("priv-w0", 0)
+    dev.read("pub", 0)                          # public pool: fine
+
+
+# ---------------------------------------------------------------------------
+# Session-level: private shards never materialize off-owner under WorkerLost
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["synthetic", "flash", "meshfeed"])
+def test_session_worker_lost_never_materializes_private_off_owner(backend, tmp_path):
+    from repro.api import FleetSpec, Session, SessionConfig, WorkerLost
+    from repro.configs import smoke_config
+    from repro.models.api import get_model
+    from repro.optim import adamw
+
+    cfg = smoke_config("deepseek-7b")
+    spec = FleetSpec.demo(3).with_storage(
+        backend, **({"root": str(tmp_path)} if backend == "flash" else {})
+    )
+    s = Session(
+        model=get_model(cfg), optimizer=adamw(), fleet=spec,
+        data=DataConfig(vocab=cfg.vocab, seq_len=16),
+        shards=spec.shards(private_per_worker={"csd": 16}, public=256),
+        config=SessionConfig(total_steps=2),
+    )
+    s.run()
+    s.apply(WorkerLost(["csd/1"]))
+    # the quarantined shard appears in NO surviving worker's sample sources
+    for w, pairs in s.dataset.group_sources.items():
+        assert all(sid != "private-csd/1" for sid, _ in pairs)
+    # and no device will hand out its bytes
+    for dev in s.devices:
+        with pytest.raises((PermissionError, KeyError)):
+            dev.read("private-csd/1", 0)
+    # training continues; custody audit stays clean
+    report = s.run(steps=1)
+    assert np.isfinite(report.final_loss)
+    assert audit_custody(s.devices.custody_log)["private_shards_rehomed"] == 0
+    assert "private-csd/1" in s.place().quarantined
+
+
+# ---------------------------------------------------------------------------
+# meshfeed: mesh construction + the multi-device acceptance smoke
+# ---------------------------------------------------------------------------
+
+
+def test_data_axis_size_picks_largest_divisor():
+    assert data_axis_size(40, 8) == 8
+    assert data_axis_size(30, 8) == 6
+    assert data_axis_size(7, 8) == 7
+    assert data_axis_size(9, 4) == 3
+    assert data_axis_size(0, 8) == 1
+
+
+def test_meshfeed_single_device_degrades():
+    """In the (1-device) test process meshfeed still works: data axis 1."""
+    import jax
+
+    from repro.core.hetero import BatchSchedule
+    from repro.storage import FleetBatcher
+
+    fleet = _fleet("meshfeed", None)
+    b = FleetBatcher(
+        cfg=CFG, schedule=BatchSchedule((2, 2)), group_workers=["w0", "w1"],
+        group_sources={"w0": [("priv-w0", 6)], "w1": [("priv-w1", 6)]},
+        fleet=fleet,
+    )
+    out = b.next_device_batch()
+    assert isinstance(out["tokens"], jax.Array)
+    assert out["tokens"].shape == (b.schedule.global_rows, CFG.seq_len)
+    assert fleet.mesh is not None and fleet.mesh.shape["data"] == 1
+    assert "data" in out["tokens"].sharding.spec
+
+
+def test_make_host_mesh_rejects_oversized():
+    from repro.launch.mesh import make_host_mesh
+
+    with pytest.raises(ValueError, match="device"):
+        make_host_mesh(data=64, model=64)       # way beyond any CPU host
+    with pytest.raises(ValueError, match="positive"):
+        make_host_mesh(data=0, model=1)
+
+
+def test_storage_spec_rejects_unknown_backend():
+    with pytest.raises(ValueError, match="unknown storage backend"):
+        StorageSpec(backend="tape")
+
+
+def test_meshfeed_session_smoke_multidevice():
+    """Acceptance: the session smoke trains through MeshFeedDevice on a
+    multi-device CPU mesh, batches born sharded along ``data``."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.pathsep.join([REPO, os.path.join(REPO, "src")])
+    code = """
+        import jax
+        assert len(jax.devices()) == 8, jax.devices()
+        from benchmarks.session_smoke import run, _checks
+        m = run(verbose=False, backend="meshfeed")
+        assert m["feed_devices"] > 1, m          # really fed a multi-device mesh
+        checks = _checks(m)
+        assert all(checks.values()), checks
+        print("MESHFEED-SMOKE OK", m["feed_devices"])
+    """
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, timeout=600, cwd=REPO,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "MESHFEED-SMOKE OK" in out.stdout

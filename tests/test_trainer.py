@@ -1,5 +1,7 @@
 """Integration: the full Stannis pipeline (tune -> plan -> place -> train),
-fault tolerance (restart, node loss), and the data pipeline invariants."""
+fault tolerance (restart, node loss), the data-pipeline invariants, and the
+removed-``Trainer`` stub contract.  (This file kept its name through the
+Trainer -> Session migration so the tier-1 history lines up.)"""
 import os
 
 import jax
@@ -7,81 +9,80 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.api import FleetSpec
+from repro.api import FleetSpec, Session, SessionConfig, DriftDetected, WorkerLost
 from repro.configs import smoke_config
 from repro.core.hetero import BatchSchedule
 from repro.core.privacy import Shard
 from repro.data.pipeline import DataConfig, PrivateShardStore, synth_sequence
 from repro.models.api import get_model
 from repro.optim import adamw
-from repro.train.trainer import Trainer, TrainerConfig
 
 
-def _fleet(n_csds=2):
-    return FleetSpec.demo(n_csds).build()
+def _spec(n_csds=2):
+    return FleetSpec.demo(n_csds)
 
 
 def _shards(n_csds=2):
-    return FleetSpec.demo(n_csds).shards(
+    return _spec(n_csds).shards(
         private_per_worker={"csd": 64}, public=4096, prefix="priv"
     )
 
 
-def _trainer(tmp_path=None, steps=6, n_csds=2):
+def _session(tmp_path=None, steps=6, n_csds=2):
     cfg = smoke_config("deepseek-7b")
-    return Trainer(
+    return Session(
         model=get_model(cfg),
         optimizer=adamw(),
-        fleet=_fleet(n_csds),
-        data_cfg=DataConfig(vocab=cfg.vocab, seq_len=16),
-        cfg=TrainerConfig(
+        fleet=_spec(n_csds),
+        data=DataConfig(vocab=cfg.vocab, seq_len=16),
+        config=SessionConfig(
             total_steps=steps,
             checkpoint_dir=str(tmp_path) if tmp_path else None,
             checkpoint_every=2,
             async_checkpoint=False,
         ),
         shards=_shards(n_csds),
-    ).setup()
+    )
 
 
 def test_end_to_end_loss_decreases():
-    tr = _trainer(steps=8)
-    assert tr.plan.imbalance_steps() == 0
-    _, hist = tr.train()
-    assert hist[-1]["loss"] < hist[0]["loss"]
+    s = _session(steps=8)
+    assert s.plan().imbalance_steps() == 0
+    report = s.run()
+    assert report.final_loss < report.history[0]["loss"]
 
 
 def test_restart_resumes_from_checkpoint(tmp_path):
-    tr = _trainer(tmp_path, steps=4)
-    tr.train()
-    assert tr.plan is not None
-    # second trainer resumes: runs only the remaining steps
-    tr2 = _trainer(tmp_path, steps=6)
-    _, hist = tr2.train()
-    assert len(hist) == 2  # resumed at step 4 of 6
+    s = _session(tmp_path, steps=4)
+    s.run()
+    assert s.plan() is not None
+    # second session resumes: runs only the remaining steps
+    s2 = _session(tmp_path, steps=6)
+    report = s2.run()
+    assert report.steps_run == 2  # resumed at step 4 of 6
 
 
-def test_drop_workers_replans():
-    tr = _trainer(steps=2, n_csds=3)
-    n_groups = tr.schedule.n_groups
-    tr.drop_workers(["csd/1"])
-    assert tr.schedule.n_groups == n_groups - 1
-    assert tr.plan.imbalance_steps() == 0
+def test_worker_lost_replans():
+    s = _session(steps=2, n_csds=3)
+    n_groups = s.tune().schedule.n_groups
+    s.apply(WorkerLost(["csd/1"]))
+    assert s.tune().schedule.n_groups == n_groups - 1
+    assert s.plan().imbalance_steps() == 0
     # the dead worker's private shard is gone — nobody else may read it
-    assert all(s.owner != "csd/1" for s in tr.shards if s.private)
-    _, hist = tr.train(steps=2)
-    assert np.isfinite(hist[-1]["loss"])
+    assert all(sh.owner != "csd/1" for sh in s.shards if sh.private)
+    report = s.run(steps=2)
+    assert np.isfinite(report.final_loss)
 
 
 def test_retune_keeps_shapes():
-    tr = _trainer(steps=2)
-    shape_before = tr.schedule.global_rows
-    tr.retune()
-    assert tr.schedule.global_rows == shape_before  # no recompilation
+    s = _session(steps=2)
+    shape_before = s.tune().schedule.global_rows
+    s.apply(DriftDetected())
+    assert s.tune().schedule.global_rows == shape_before  # no recompilation
 
 
 # ---------------------------------------------------------------------------
-# data pipeline
+# data pipeline (compat shim surface over repro.storage)
 # ---------------------------------------------------------------------------
 
 
@@ -106,15 +107,33 @@ def test_private_store_enforces_ownership():
 
 
 def test_dataset_layout_and_masks():
-    tr = _trainer(steps=1)
-    b = tr.dataset.next_batch()
-    R = tr.schedule.global_rows
+    s = _session(steps=1)
+    b = s.dataset.next_batch()
+    R = s.tune().schedule.global_rows
     assert b["tokens"].shape == (R, 16)
     assert b["loss_mask"].shape == (R, 16)
     # mask matches the schedule exactly
     np.testing.assert_array_equal(
-        b["loss_mask"][:, 0], tr.schedule.row_mask()
+        b["loss_mask"][:, 0], s.tune().schedule.row_mask()
     )
     # invalid rows carry zero tokens (never sampled)
     dead = b["tokens"][b["loss_mask"][:, 0] == 0]
     assert (dead == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# the removed Trainer: a raising stub with a migration hint
+# ---------------------------------------------------------------------------
+
+
+def test_trainer_stub_raises_migration_hint():
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    with pytest.raises(DeprecationWarning, match="repro.api.Session"):
+        Trainer()
+    with pytest.raises(DeprecationWarning, match="Session"):
+        Trainer(model=None, optimizer=None, fleet=None,
+                data_cfg=None, cfg=None, shards=[])
+    # the config alias stays importable so old configs migrate in place
+    assert issubclass(TrainerConfig, SessionConfig)
+    assert TrainerConfig(total_steps=5).total_steps == 5
