@@ -1,13 +1,15 @@
 """End-to-end Session-API smoke: the whole pipeline plus elastic events.
 
 Exercises what the paper's rack would see in production: tune -> plan ->
-place -> compile -> train, then a drift re-tune (must NOT recompile) and a
-node loss (paper's backfill remedy), all through ``repro.api.Session`` —
-pulled through the selected :mod:`repro.storage` backend (``--backend
-synthetic|flash|meshfeed``).  The meshfeed run on a multi-device host
-(``XLA_FLAGS=--xla_force_host_platform_device_count=8``) is the
-multi-device acceptance path: batches land pre-sharded on a real
-``jax.sharding.Mesh``.
+place -> shard -> compile -> train, then a drift re-tune (must NOT
+recompile) and a node loss (paper's backfill remedy), all through
+``repro.api.Session`` — pulled through the selected :mod:`repro.storage`
+backend (``--backend synthetic|flash|meshfeed``).  The meshfeed run on a
+multi-device host (``XLA_FLAGS=--xla_force_host_platform_device_count=8``)
+is the multi-device acceptance path: batches land pre-sharded on a real
+``jax.sharding.Mesh``, and the smoke asserts the compiled step's input
+shardings are the ShardingPlan's (explicit, not GSPMD defaults) and that
+trained state + batches actually land on them.
 
     PYTHONPATH=src python benchmarks/session_smoke.py
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
@@ -63,6 +65,24 @@ def run(verbose: bool = True, backend: str = "synthetic") -> Dict[str, float]:
     from repro.core.privacy import audit_custody
     audit = audit_custody(s.devices.custody_log)
 
+    # sharding-explicit execution: the (re-derived, post-loss) plan must be
+    # exactly what the compiled step declares, and what state/batches use
+    import jax
+
+    plan = s.shard()
+    compiled = s.compile()
+    explicit = compiled.in_shardings == (plan.params, plan.opt, plan.batch)
+    p_leaves = jax.tree_util.tree_leaves(report2.params)
+    sh_leaves = jax.tree_util.tree_leaves(plan.params)
+    params_on_plan = len(p_leaves) == len(sh_leaves) and all(
+        l.sharding.is_equivalent_to(sh, l.ndim)
+        for l, sh in zip(p_leaves, sh_leaves)
+    )
+    tok = s.dataset.next_device_batch()["tokens"]
+    batch_on_plan = tok.sharding.is_equivalent_to(
+        plan.batch["tokens"], tok.ndim
+    )
+
     mesh = s.devices.mesh
     out = {
         "loss_start": loss0,
@@ -73,6 +93,9 @@ def run(verbose: bool = True, backend: str = "synthetic") -> Dict[str, float]:
         "compile_count": float(s.compile_count),
         "private_shards_rehomed": float(audit["private_shards_rehomed"]),
         "feed_devices": float(mesh.shape["data"]) if mesh is not None else 1.0,
+        "data_axis": float(plan.data_axis),
+        "sharding_explicit": float(explicit),
+        "state_on_plan": float(params_on_plan and batch_on_plan),
     }
     if verbose:
         print(f"\n== Session-API smoke [{backend}] ==")
@@ -87,6 +110,10 @@ def _checks(m: Dict[str, float]) -> Dict[str, bool]:
         "drift_no_recompile": m["drift_recompiled"] == 0.0,
         "survives_node_loss": bool(np.isfinite(m["loss_after_loss_event"])),
         "no_private_rehome": m["private_shards_rehomed"] == 0.0,
+        # the compiled step's input shardings ARE the ShardingPlan's
+        "sharding_explicit": m["sharding_explicit"] == 1.0,
+        # trained params + fed batches land on the plan's NamedShardings
+        "state_on_plan": m["state_on_plan"] == 1.0,
     }
 
 

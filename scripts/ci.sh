@@ -20,8 +20,13 @@ python -m pytest -x -q
 echo "[ci] session smoke (synthetic backend)"
 PYTHONPATH=src python benchmarks/session_smoke.py
 
-echo "[ci] session smoke (meshfeed backend, 8-device CPU mesh)"
+echo "[ci] sharded session smoke (meshfeed backend, 8-device CPU mesh):"
+echo "[ci]   asserts the compiled step's input shardings match the"
+echo "[ci]   ShardingPlan (explicit in_shardings, not GSPMD defaults)"
 XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     PYTHONPATH=src python benchmarks/session_smoke.py --backend meshfeed
+
+echo "[ci] step benchmark (8-device CPU mesh) -> BENCH_step.json"
+PYTHONPATH=src python benchmarks/bench_step.py --steps 4
 
 echo "[ci] OK"

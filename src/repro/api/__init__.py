@@ -9,13 +9,13 @@
         shards=spec.shards(private_per_worker={"csd": 64}, public=4096),
         config=SessionConfig(total_steps=20),
     )
-    report = session.run()          # tune -> plan -> place -> compile -> train
+    report = session.run()          # tune -> plan -> place -> shard -> compile -> train
 
 See :mod:`repro.api.session` for the stage-by-stage contract and
 :mod:`repro.api.events` for the elastic-event model.
 """
 from repro.api.artifacts import (
-    CompiledStep, ReplanResult, TrainReport, TunePlan,
+    CompiledStep, ReplanResult, ShardingPlan, TrainReport, TunePlan,
 )
 from repro.api.callbacks import CallbackRegistry
 from repro.api.events import (
@@ -39,6 +39,7 @@ __all__ = [
     "ServeSession",
     "Session",
     "SessionConfig",
+    "ShardingPlan",
     "StorageSpec",
     "TrainReport",
     "TunePlan",

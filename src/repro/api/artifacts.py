@@ -5,6 +5,7 @@ Each pipeline stage returns one immutable artifact:
     Session.tune()    -> TunePlan            (Algorithm 1 + group schedule)
     Session.plan()    -> core EpochPlan      (Eq. 1 dataset shares)
     Session.place()   -> core PlacementManifest  (privacy placement)
+    Session.shard()   -> ShardingPlan        (rule table resolved on the mesh)
     Session.compile() -> CompiledStep        (the jitted SPMD step)
     Session.run()     -> TrainReport
 
@@ -39,12 +40,22 @@ class TunePlan:
         return self.result.batches
 
 
+# The ShardingPlan artifact class lives in :mod:`repro.distributed.sharding`
+# (beside the rule engine that resolves it) so layers below the api package
+# — train/steps, storage/meshfeed, checkpoint — can type against it without
+# importing the whole Session surface; it is re-exported here because it IS
+# a Session stage artifact (``Session.shard()``'s return value).
+from repro.distributed.sharding import ShardingPlan  # noqa: E402,F401
+
+
 @dataclasses.dataclass(frozen=True)
 class CompiledStep:
     """The jitted train step plus the shape signature it was built for.
 
     ``build_id`` is the session-wide compile counter — the probe tests use
     to assert that a drift re-tune did NOT trigger a rebuild.
+    ``in_shardings``/``out_shardings`` record the explicit ShardingPlan trees
+    the step was jitted with (``None`` only for externally built steps).
     """
 
     step_fn: Callable
@@ -53,6 +64,8 @@ class CompiledStep:
     valid_rows: int           # lr-schedule anchor at build time
     build_id: int
     config_key: Tuple = ()    # the SessionConfig values baked into the step
+    in_shardings: Any = None  # (params, opt, batch) NamedSharding trees
+    out_shardings: Any = None
 
     def signature(self) -> Tuple[int, int]:
         return (self.global_rows, self.seq_len)

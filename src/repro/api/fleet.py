@@ -16,7 +16,7 @@ A spec is immutable; ``add`` returns a new spec, so specs chain:
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Mapping, Optional, Tuple
+from typing import Any, List, Mapping, Optional, Tuple
 
 from repro.core.privacy import Shard
 from repro.core.topology import Fleet, WorkerClass, paper_fleet, tpu_fleet
@@ -31,11 +31,17 @@ class FleetSpec:
     :class:`~repro.storage.StorageDevice` backend every worker's device uses
     (``synthetic`` | ``flash`` | ``meshfeed``); see
     :meth:`with_storage`.
+
+    ``sharding`` carries fleet-wide logical-axis rule OVERRIDES (see
+    :meth:`with_sharding`): ``Session.shard()`` merges them into the rule
+    table before resolving the :class:`~repro.api.artifacts.ShardingPlan`,
+    so placement policy travels with the fleet description.
     """
 
     classes: Tuple[WorkerClass, ...] = ()
     name: str = "custom"
     storage: StorageSpec = dataclasses.field(default_factory=StorageSpec)
+    sharding: Tuple[Tuple[str, Any], ...] = ()
 
     # -- presets -----------------------------------------------------------
 
@@ -118,6 +124,23 @@ class FleetSpec:
         """
         return dataclasses.replace(
             self, storage=StorageSpec(backend=backend, **kw)
+        )
+
+    def with_sharding(self, **rules: Any) -> "FleetSpec":
+        """Override logical-axis -> mesh-axis rules fleet-wide:
+
+            FleetSpec.demo(3).with_sharding(embed="data")      # FSDP weights
+            FleetSpec.demo(3).with_sharding(experts=("data",)) # EP over data
+            FleetSpec.demo(3).with_sharding(heads=None)        # replicate
+
+        Values are a mesh-axis name, a tuple of axis names, or ``None``
+        (replicate).  ``Session.shard()`` merges these over the per-arch
+        defaults when it resolves the :class:`ShardingPlan`.
+        """
+        merged = dict(self.sharding)
+        merged.update(rules)
+        return dataclasses.replace(
+            self, sharding=tuple(sorted(merged.items()))
         )
 
     def build(self) -> Fleet:

@@ -11,8 +11,21 @@ cached, individually overridable stage artifacts:
     tune_plan = session.tune()      # Algorithm 1 -> TunePlan
     epoch     = session.plan()      # Eq. 1       -> EpochPlan
     manifest  = session.place()     # privacy     -> FleetManifest (device-aware)
+    shard     = session.shard()     # rule table x mesh -> ShardingPlan
     step      = session.compile()   # jitted SPMD -> CompiledStep
     report    = session.run()       # training    -> TrainReport
+
+Execution is *sharding-explicit*: ``shard()`` resolves the logical-axis rule
+table (:mod:`repro.distributed.sharding`) against the live mesh once into a
+:class:`~repro.api.artifacts.ShardingPlan`; ``compile()`` jits the step with
+the plan as explicit ``in_shardings``/``out_shardings``; model init is
+jitted with ``out_shardings`` so parameters are BORN as mesh shards (a full
+replicated param tree never exists on host); the meshfeed backend lands
+batches with the plan's layout; and checkpoint restore places leaves
+straight onto the plan's shardings for whatever mesh shape the restart has.
+The plan is keyed by the pinned row capacity, so drift re-tunes keep both
+the plan and the compiled step (the ``compile_count`` probe still holds),
+while a node loss/join resizes the mesh and re-derives both.
 
 The data plane is the :mod:`repro.storage` device fleet: ``session.devices``
 is a :class:`~repro.storage.DeviceFleet` (one StorageDevice per dp-group
@@ -49,11 +62,14 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 import jax
 import jax.numpy as jnp
 
-from repro.api.artifacts import CompiledStep, ReplanResult, TrainReport, TunePlan
+from repro.api.artifacts import (
+    CompiledStep, ReplanResult, ShardingPlan, TrainReport, TunePlan,
+)
 from repro.api.callbacks import CallbackRegistry
 from repro.api.events import DriftDetected, FleetEvent, WorkerJoined, WorkerLost
 from repro.api.fleet import FleetSpec
 from repro.checkpoint.manager import CheckpointManager
+from repro.compat import set_mesh as compat_set_mesh
 from repro.core.hetero import BatchSchedule, schedule_from_tune
 from repro.core.load_balance import EpochPlan, plan_epoch
 from repro.core.privacy import PlacementManifest, Shard, place
@@ -64,22 +80,27 @@ from repro.storage import (
     DataConfig, DeviceFleet, FleetBatcher, FleetManifest, StorageSpec,
     make_fleet_batcher, manifest_sources,
 )
+from repro.distributed.sharding import use_rules
+from repro.launch.mesh import make_single_mesh
 from repro.optim.optimizers import Optimizer
 from repro.optim.schedules import goyal_schedule
-from repro.train.steps import make_train_step
+from repro.train.steps import (
+    abstract_train_state, build_sharding_plan, make_train_step,
+)
 
 PyTree = Any
 
 # stage dependency graph: invalidating a stage clears it plus everything
-# that derives from it.  Note "compile" depends only on the tune schedule
-# (shapes + lr anchor) — a plan/place override must not throw away the
-# jitted step.
-_STAGES = ("tune", "plan", "place", "dataset", "compile")
+# that derives from it.  Note "shard"/"compile" depend only on the tune
+# schedule (shapes + mesh + lr anchor) — a plan/place override must not
+# throw away the sharding plan or the jitted step.
+_STAGES = ("tune", "plan", "place", "dataset", "shard", "compile")
 _DOWNSTREAM = {
-    "tune": ("plan", "place", "dataset", "compile"),
+    "tune": ("plan", "place", "dataset", "shard", "compile"),
     "plan": ("place", "dataset"),
     "place": ("dataset",),
     "dataset": (),
+    "shard": ("compile",),
     "compile": (),
 }
 
@@ -108,7 +129,7 @@ class SessionConfig:
 
 
 class Session:
-    """Staged pipeline: tune -> plan -> place -> compile -> run, re-enterable."""
+    """Staged pipeline: tune -> plan -> place -> shard -> compile -> run."""
 
     def __init__(
         self,
@@ -126,6 +147,10 @@ class Session:
         self.model = model
         self.optimizer = optimizer
         spec_storage = fleet.storage if isinstance(fleet, FleetSpec) else None
+        # fleet-wide logical-axis rule overrides (FleetSpec.with_sharding)
+        self.sharding_overrides: Dict[str, Any] = (
+            dict(fleet.sharding) if isinstance(fleet, FleetSpec) else {}
+        )
         self.fleet: Fleet = fleet.build() if isinstance(fleet, FleetSpec) else fleet
         self.data = data
         self._shards: List[Shard] = list(shards)
@@ -206,6 +231,7 @@ class Session:
     def tune(self, *, force: bool = False) -> TunePlan:
         prev = self._artifacts.get("tune")
         prev_compiled = self._artifacts.get("compile")
+        prev_shard = self._artifacts.get("shard")
         if force:
             self._invalidate("tune")
         if "tune" not in self._artifacts:
@@ -234,6 +260,12 @@ class Session:
             self._artifacts["tune"] = TunePlan(
                 result=result, schedule=schedule, group_workers=tuple(workers)
             )
+            if (
+                prev_shard is not None
+                and prev_shard.global_rows == schedule.global_rows
+            ):
+                # same rows => same mesh => the resolved plan survives
+                self._artifacts["shard"] = prev_shard
             if (
                 prev_compiled is not None
                 and prev_compiled.global_rows == schedule.global_rows
@@ -288,7 +320,43 @@ class Session:
             )
         return self._artifacts["dataset"]
 
-    # -- stage 4: the jitted SPMD step ------------------------------------
+    # -- stage 4: the sharding plan ---------------------------------------
+
+    def shard(self, *, force: bool = False) -> ShardingPlan:
+        """Resolve the logical-axis rule table against the live mesh ONCE.
+
+        The plan is the placement contract every downstream consumer reads:
+        ``compile()`` (explicit in/out_shardings), sharded init, the
+        meshfeed data plane, and checkpoint restore.  It is keyed by the
+        schedule's ``global_rows``: a cached plan for a different row count
+        (an elastic resize changed the mesh) is invalidated and re-derived,
+        together with the compiled step.
+        """
+        if force:
+            self._invalidate("shard")
+        tp = self.tune()
+        cached = self._artifacts.get("shard")
+        if cached is not None and cached.global_rows != tp.schedule.global_rows:
+            self._invalidate("shard")      # elastic mesh resize: re-derive
+        if "shard" not in self._artifacts:
+            mesh = self.devices.feed_mesh(tp.schedule.global_rows)
+            if mesh is None:
+                # host-delivery backends: same code path on a 1x1 mesh
+                mesh = make_single_mesh()
+            self._artifacts["shard"] = build_sharding_plan(
+                self.model, self.optimizer,
+                mesh=mesh,
+                global_rows=tp.schedule.global_rows,
+                seq_len=self.data.seq_len,
+                extra_rules=self.sharding_overrides or None,
+            )
+        plan = self._artifacts["shard"]
+        # (re-)hand the plan to the data plane: meshfeed lands every batch
+        # with the plan's exact NamedShardings; idempotent for other backends
+        self.devices.adopt_plan(plan)
+        return plan
+
+    # -- stage 5: the jitted SPMD step ------------------------------------
 
     def _config_key(self) -> Tuple:
         """The SessionConfig values baked into the compiled step."""
@@ -307,6 +375,7 @@ class Session:
             self._invalidate("compile")
         if "compile" not in self._artifacts:
             tp = self.tune()
+            plan = self.shard()
             sched = goyal_schedule(
                 self.config.base_lr,
                 tp.schedule.valid_rows,
@@ -318,16 +387,77 @@ class Session:
                 self.model, self.optimizer, sched,
                 aux_weight=self.config.aux_weight,
             )
+            mesh = plan.mesh
+
+            def step_in_mesh(params, opt_state, batch):
+                # trace under the plan's mesh AND rule table so the model's
+                # logical-axis activation constraints resolve against the
+                # same (possibly overridden) rules that produced the
+                # argument shardings — not the module defaults
+                with use_rules(plan.rules), compat_set_mesh(mesh):
+                    return step(params, opt_state, batch)
+
+            in_shardings = (plan.params, plan.opt, plan.batch)
+            # metrics are scalars: plan.replicated is a pytree-prefix for
+            # the whole metrics dict
+            out_shardings = (plan.params, plan.opt, plan.replicated)
             self._compile_count += 1
             self._artifacts["compile"] = CompiledStep(
-                step_fn=jax.jit(step, donate_argnums=(0, 1)),
+                step_fn=jax.jit(
+                    step_in_mesh,
+                    in_shardings=in_shardings,
+                    out_shardings=out_shardings,
+                    donate_argnums=(0, 1),
+                ),
                 global_rows=tp.schedule.global_rows,
                 seq_len=self.data.seq_len,
                 valid_rows=tp.schedule.valid_rows,
                 build_id=self._compile_count,
                 config_key=self._config_key(),
+                in_shardings=in_shardings,
+                out_shardings=out_shardings,
             )
         return self._artifacts["compile"]
+
+    # -- sharded state construction / adoption ----------------------------
+
+    def init_state(
+        self,
+        plan: Optional[ShardingPlan] = None,
+        *,
+        key: Optional[jax.Array] = None,
+        init_opt: bool = True,
+    ) -> Tuple[PyTree, Any]:
+        """Initialize (params, opt_state) DIRECTLY as mesh shards.
+
+        Both inits are jitted with the plan's trees as ``out_shardings``, so
+        every leaf materializes on its own mesh slice — a fully replicated
+        host-side param tree never exists at any point.  The only bytes that
+        ever cross host->device are the PRNG seed (pass ``key`` to move even
+        that out; ``benchmarks/bench_step.py`` proves the zero-transfer
+        property under ``jax.transfer_guard("disallow")``).
+        """
+        plan = plan or self.shard()
+        model = self.model
+
+        def init_fn(key):
+            params, _ = model.init_params(key=key)
+            return params
+
+        if key is None:
+            key = jax.random.PRNGKey(self.config.seed)
+        params = jax.jit(init_fn, out_shardings=plan.params)(key)
+        if not init_opt:      # caller brings its own opt_state (continuation)
+            return params, None
+        opt_state = jax.jit(
+            self.optimizer.init, out_shardings=plan.opt
+        )(params)
+        return params, opt_state
+
+    def _adopt_state(self, tree: PyTree, shardings: PyTree) -> PyTree:
+        """Re-home caller-supplied state onto the live plan (a no-op when it
+        already matches — e.g. continuing a run on an unchanged mesh)."""
+        return jax.device_put(tree, shardings)
 
     # -- stage 5: training ------------------------------------------------
 
@@ -344,36 +474,48 @@ class Session:
         restarts warmup from step 0."""
         cfg = self.config
         steps = steps or cfg.total_steps
-        key = jax.random.PRNGKey(cfg.seed)
-        if params is None:
-            params, _ = self.model.init_params(key=key)
-        if opt_state is None:
-            opt_state = self.optimizer.init(params)
 
+        compiled = self.compile()
+        plan = self.shard()
         ckpt = (
             CheckpointManager(cfg.checkpoint_dir, keep=cfg.keep_checkpoints)
             if cfg.checkpoint_dir else None
         )
         start_step = 0
         if ckpt is not None and ckpt.latest_step() is not None:
-            # restart-after-failure: resume newest valid checkpoint
-            state, meta = ckpt.restore({"params": params, "opt": opt_state})
+            # restart-after-failure: resume the newest valid checkpoint,
+            # each leaf placed STRAIGHT onto the plan's NamedSharding — the
+            # elastic path (save at dp=8, restore at dp=4) never stages a
+            # fully replicated tree on any device
+            params_abs, _, opt_abs = abstract_train_state(
+                self.model, self.optimizer
+            )
+            state, meta = ckpt.restore(
+                {"params": params_abs, "opt": opt_abs},
+                shardings={"params": plan.params, "opt": plan.opt},
+            )
             params, opt_state = state["params"], state["opt"]
             start_step = int(meta.get("step", ckpt.latest_step()))
+        else:
+            # no checkpoint: fresh state is BORN sharded (jitted init with
+            # the plan as out_shardings); caller-supplied state (continuing
+            # across an elastic event) is re-homed onto the live plan — a
+            # no-op when the mesh did not change
+            if params is None:
+                params, fresh_opt = self.init_state(
+                    plan, init_opt=opt_state is None
+                )
+                opt_state = opt_state if opt_state is not None else fresh_opt
+            else:
+                params = self._adopt_state(params, plan.params)
+            if opt_state is None:
+                opt_state = jax.jit(
+                    self.optimizer.init, out_shardings=plan.opt
+                )(params)
+            else:
+                opt_state = self._adopt_state(opt_state, plan.opt)
 
-        compiled = self.compile()
         dataset = self.dataset
-        # meshfeed: batches land sharded on the fleet's mesh, so model state
-        # must live on the SAME device set.  Elastic events can resize the
-        # mesh (the data axis tracks global_rows), so re-home params/opt
-        # onto the live mesh — a no-op when it did not change.
-        feed_mesh = self.devices.feed_mesh(self.tune().schedule.global_rows)
-        if feed_mesh is not None:
-            from jax.sharding import NamedSharding, PartitionSpec
-
-            replicated = NamedSharding(feed_mesh, PartitionSpec())
-            params = jax.device_put(params, replicated)
-            opt_state = jax.device_put(opt_state, replicated)
         monitor = DriftMonitor(
             margin=cfg.retune_margin, patience=cfg.retune_patience
         )
@@ -545,11 +687,20 @@ class Session:
             compiled is not None
             and compiled.global_rows == new.schedule.global_rows
         )
+        shard_plan = self._artifacts.get("shard")
+        keep_shard = (
+            shard_plan is not None
+            and shard_plan.global_rows == new.schedule.global_rows
+        )
         dataset = self._artifacts.get("dataset")
         keep_dataset = (
             dataset is not None and new.group_workers == old.group_workers
         )
         self.override("tune", new)          # invalidates plan/place/dataset
+        if keep_shard:
+            # same rows => same mesh: the resolved sharding plan survives
+            # the event exactly like the compiled step does
+            self._artifacts["shard"] = shard_plan
         if keep_compiled:
             self._artifacts["compile"] = compiled
         self.plan()

@@ -5,6 +5,12 @@ Design (1000+-node requirements):
     array + the pytree structure, so restore can re-shard onto ANY mesh — a
     restart after losing a pod re-shards to the survivors (elasticity test:
     save at dp=8, restore at dp=4/2).
+  * Sharding-aware both ways: save assembles each leaf on HOST from its
+    per-device shards (``addressable_shards``) — a sharded array is never
+    re-gathered into one replicated device buffer just to write it; restore
+    takes a ``shardings`` pytree (e.g. a live
+    :class:`~repro.api.artifacts.ShardingPlan`'s trees) and ``device_put``s
+    every leaf straight onto its target ``NamedSharding``.
   * Atomic: write to ``step_N.tmp/`` then ``rename`` — a crash mid-write never
     corrupts the latest valid checkpoint; restore picks the newest *valid* dir
     (manifest present + CRC match).
@@ -59,6 +65,49 @@ def _treedef_of(tree: PyTree):
     return jax.tree_util.tree_structure(tree)
 
 
+def _host_leaf(leaf: Any) -> np.ndarray:
+    """Snapshot one leaf to a host np array, gathering per-shard.
+
+    For a mesh-sharded ``jax.Array`` the logical array is assembled on host
+    from the single-device shards (one D2H copy per shard, each the shard's
+    size) — the full array is never re-materialized in any one device's
+    memory.  Replicated and single-device leaves copy their one shard.
+    """
+    if isinstance(leaf, jax.Array) and hasattr(leaf, "addressable_shards"):
+        if not getattr(leaf, "is_fully_addressable", True):
+            # multi-process meshes: this process cannot see the whole leaf;
+            # a per-host partial write would CRC-stamp garbage as valid
+            raise ValueError(
+                "checkpoint save needs fully-addressable arrays; in a "
+                "multi-process mesh gather (or save per-host) explicitly"
+            )
+        shards = list(leaf.addressable_shards)
+        if len(shards) == 1 or leaf.sharding.is_fully_replicated:
+            arr = np.asarray(shards[0].data)
+            if arr.shape != tuple(leaf.shape):
+                raise ValueError(
+                    f"shard covers {arr.shape} of logical {tuple(leaf.shape)}"
+                )
+            return arr
+        out = np.empty(leaf.shape, leaf.dtype)
+        seen = set()
+        covered = 0
+        for s in shards:
+            key = str(s.index)            # skip replica copies of a shard
+            if key in seen:
+                continue
+            seen.add(key)
+            data = np.asarray(s.data)
+            out[s.index] = data
+            covered += int(data.size)
+        if covered != int(leaf.size):     # never save uninitialized memory
+            raise ValueError(
+                f"shards cover {covered} of {int(leaf.size)} elements"
+            )
+        return out
+    return np.asarray(jax.device_get(leaf))
+
+
 def save(
     directory: str,
     step: int,
@@ -74,11 +123,11 @@ def save(
         shutil.rmtree(tmp)
     os.makedirs(tmp)
 
-    # snapshot to host np arrays (device_get gathers sharded arrays fully)
+    # snapshot to host np arrays, assembled per-shard (see _host_leaf)
     leaves = _flatten_with_paths(tree)
     entries = {}
     for key, leaf in leaves:
-        arr = np.asarray(jax.device_get(leaf))
+        arr = _host_leaf(leaf)
         fn = key.replace("/", "__") + ".npy"
         np.save(os.path.join(tmp, fn), arr)
         entries[key] = {
@@ -196,9 +245,9 @@ class CheckpointManager:
 
     def save(self, step: int, tree: PyTree, metadata=None, *, async_: bool = False):
         if async_:
-            # snapshot on the caller thread (cheap device->host copy),
+            # snapshot on the caller thread (per-shard device->host copies),
             # serialize + fsync + rotate on the background thread
-            host = jax.tree_util.tree_map(lambda x: np.asarray(jax.device_get(x)), tree)
+            host = jax.tree_util.tree_map(_host_leaf, tree)
             self.wait()
 
             def work():

@@ -11,6 +11,9 @@ the same code paths run everywhere.
 """
 from __future__ import annotations
 
+import contextlib
+import dataclasses
+import warnings
 from typing import Any, Dict, Optional, Sequence, Tuple, Union
 
 import jax
@@ -20,6 +23,53 @@ from repro.compat import constraint_sharding, get_abstract_mesh
 
 PyTree = Any
 MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    """The resolved placement contract between data, params, and the step.
+
+    ``Session.shard()`` resolves the logical-axis rule table below against
+    the live mesh ONCE (see :func:`repro.train.steps.build_sharding_plan`),
+    yielding ``NamedSharding`` trees for every jit argument.  Everything
+    downstream consumes this artifact instead of re-deriving layouts:
+
+      * ``Session.compile()`` passes ``params``/``opt``/``batch`` as
+        explicit ``in_shardings`` (and ``params``/``opt``/``replicated`` as
+        ``out_shardings``) — the step is sharding-explicit, not
+        GSPMD-implicit.
+      * model init is jitted with ``out_shardings=plan.params`` so parameters
+        materialize directly as mesh shards (never host-replicated).
+      * the meshfeed storage backend lands batch rows with ``plan.batch``
+        instead of rebuilding its own layout.
+      * checkpoint restore places leaves straight onto ``params``/``opt``
+        for ANY mesh shape (elastic save-at-dp=8 / restore-at-dp=4).
+
+    The plan is keyed by ``global_rows``: an elastic event that changes the
+    row count resizes the mesh, which invalidates (and re-derives) the plan.
+    """
+
+    mesh: Any                 # the live jax.sharding.Mesh
+    rules: Dict[str, Any]     # logical axis -> mesh axes, as resolved
+    params: PyTree            # NamedSharding tree matching the param pytree
+    opt: Any                  # OptState of NamedShardings (step replicated)
+    batch: Dict[str, Any]     # NamedSharding per batch key (tokens/labels/..)
+    replicated: Any           # NamedSharding(mesh, P()) — metrics/out prefix
+    global_rows: int
+    data_axis: int            # |mesh["data"]| — how many ways rows shard
+
+    @property
+    def n_devices(self) -> int:
+        return int(self.mesh.devices.size)
+
+    def signature(self) -> Tuple[int, int, int]:
+        return (self.global_rows, self.data_axis, self.n_devices)
+
+    def describe(self) -> str:
+        return (
+            f"ShardingPlan(mesh={dict(self.mesh.shape)}, "
+            f"rows={self.global_rows}, data_axis={self.data_axis})"
+        )
 
 # ---------------------------------------------------------------------------
 # Rule tables
@@ -184,6 +234,24 @@ def get_rules() -> Dict[str, MeshAxes]:
     return _CURRENT_RULES
 
 
+@contextlib.contextmanager
+def use_rules(rules: Dict[str, MeshAxes], constrain: bool = True):
+    """Temporarily install a rule table (and restore the previous one).
+
+    ``Session.compile()`` traces the step under the ShardingPlan's rules so
+    the in-model activation constraints (:func:`with_logical_constraint`)
+    resolve against the SAME table that produced the argument shardings —
+    including any ``FleetSpec.with_sharding`` overrides.
+    """
+    global _CURRENT_RULES, _CONSTRAIN
+    prev_rules, prev_constrain = _CURRENT_RULES, _CONSTRAIN
+    _CURRENT_RULES, _CONSTRAIN = rules, constrain
+    try:
+        yield
+    finally:
+        _CURRENT_RULES, _CONSTRAIN = prev_rules, prev_constrain
+
+
 def with_logical_constraint(x: jax.Array, *axes: Optional[str]) -> jax.Array:
     """``with_sharding_constraint`` by logical axis names; no-op outside a mesh."""
     if not _CONSTRAIN:
@@ -207,5 +275,31 @@ def with_logical_constraint(x: jax.Array, *axes: Optional[str]) -> jax.Array:
         return jax.lax.with_sharding_constraint(
             x, constraint_sharding(mesh, P(*clean))
         )
-    except Exception:
+    except (ValueError, TypeError) as e:
+        # Only the expected constraint failures (rank/axis mismatches) are
+        # tolerable — and even those get ONE warning per (spec, mesh) so a
+        # rule-table typo can't silently replicate a tensor forever.
+        _warn_constraint_skipped(tuple(axes), clean, mesh, e)
         return x
+
+
+_WARNED_CONSTRAINTS: set = set()
+
+
+def _warn_constraint_skipped(axes, clean, mesh, err) -> None:
+    key = (
+        tuple(axes),
+        tuple(tuple(p) if isinstance(p, tuple) else p for p in clean),
+        tuple(mesh.axis_names),
+        tuple(int(mesh.shape[a]) for a in mesh.axis_names),
+    )
+    if key in _WARNED_CONSTRAINTS:
+        return
+    _WARNED_CONSTRAINTS.add(key)
+    warnings.warn(
+        f"sharding constraint for logical axes {tuple(axes)} "
+        f"(spec {P(*clean)}) skipped on mesh "
+        f"{dict(mesh.shape)}: {type(err).__name__}: {err}",
+        RuntimeWarning,
+        stacklevel=3,
+    )

@@ -41,21 +41,11 @@ from repro.launch.mesh import make_production_mesh
 from repro.models.api import get_model
 from repro.optim import adamw
 from repro.roofline.collectives import collective_bytes_from_hlo
-from repro.train.steps import make_serve_step, make_train_step
+from repro.train.steps import (
+    abstract_opt_state, make_serve_step, make_train_step,
+)
 
 SDS = jax.ShapeDtypeStruct
-
-
-def _abstract_opt_state(params):
-    """AdamW state as ShapeDtypeStructs (mu, nu f32; step scalar)."""
-    from repro.optim.optimizers import OptState
-
-    f32 = lambda p: SDS(p.shape, jnp.float32)
-    return OptState(
-        step=SDS((), jnp.int32),
-        mu=jax.tree_util.tree_map(f32, params),
-        nu=jax.tree_util.tree_map(f32, params),
-    )
 
 
 def _batch_axes(batch: Dict[str, Any]) -> Dict[str, Any]:
@@ -223,7 +213,7 @@ def _lower_and_compile(cfg, shape, mesh, rules, opt_rules=None):
             step = make_train_step(model, opt, lambda s: jnp.float32(1e-3))
             from repro.optim.optimizers import OptState
 
-            opt_state = _abstract_opt_state(params)
+            opt_state = abstract_opt_state(opt, params)
             m_shardings = (
                 arg_shardings_for_tree(p_axes, params, opt_rules, mesh)
                 if opt_rules is not None else p_shardings

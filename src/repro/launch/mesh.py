@@ -49,6 +49,19 @@ def make_host_mesh(
     return make_mesh((data, model), axis_names)
 
 
+def make_single_mesh(
+    axis_names: Tuple[str, ...] = ("data", "model")
+) -> Mesh:
+    """Degenerate 1x1 mesh over one device.
+
+    Host-delivery storage backends (synthetic / flash) have no feed mesh of
+    their own; ``Session.shard()`` resolves the rule table against this mesh
+    so the SAME sharding-explicit compile path (explicit ``in_shardings``,
+    jitted sharded init) runs on a laptop CPU and a pod alike.
+    """
+    return make_mesh((1,) * len(axis_names), axis_names)
+
+
 # Hardware constants (TPU v5e-class) used by the roofline analysis.
 PEAK_FLOPS_BF16 = 197e12        # per chip
 HBM_BW = 819e9                  # bytes/s per chip

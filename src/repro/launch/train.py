@@ -94,6 +94,7 @@ def main(argv=None) -> int:
 
     tune_plan = session.tune()
     epoch = session.plan()
+    shard_plan = session.shard()
     print(f"arch={cfg.name} params={cfg.param_count():,}")
     print(f"tuned batches: {tune_plan.batches} "
           f"(margin {tune_plan.result.margin:.0%}, "
@@ -102,6 +103,8 @@ def main(argv=None) -> int:
           f"pad={tune_plan.schedule.pad_fraction:.1%}")
     print(f"epoch: {epoch.steps_per_epoch} steps, "
           f"imbalance {epoch.imbalance_steps()} steps")
+    print(f"sharding: {shard_plan.describe()} "
+          f"batch={shard_plan.batch['tokens'].spec}")
 
     session.callbacks.on_step(
         lambda i, m: print(

@@ -260,6 +260,15 @@ class DeviceFleet:
             quarantined=tuple(sorted(self.quarantined)),
         )
 
+    def adopt_plan(self, plan) -> None:
+        """Hand a session's :class:`~repro.api.artifacts.ShardingPlan` to the
+        data plane: the meshfeed backend lands every batch key with the
+        plan's ``NamedSharding`` (the exact layout the compiled step declares
+        as ``in_shardings``).  Host-delivery backends ignore it — their
+        arrays are resharded by jit against the plan's 1x1 mesh."""
+        if self._feeder is not None:
+            self._feeder.adopt_shardings(plan.batch)
+
     def to_device_batch(self, batch: Dict[str, np.ndarray]) -> Dict:
         """Land host arrays on the accelerator, backend-appropriately."""
         if self._feeder is not None:

@@ -49,12 +49,22 @@ def data_axis_size(global_rows: int, n_devices: int) -> int:
 
 class MeshFeeder:
     """Builds (and re-builds, when the row count changes across elastic
-    events) the host mesh, and feeds host batches onto it per-shard."""
+    events) the host mesh, and feeds host batches onto it per-shard.
+
+    When a session's :class:`~repro.api.artifacts.ShardingPlan` is adopted
+    (:meth:`adopt_shardings`), batches land with the PLAN's ``NamedSharding``
+    per key — the layout the compiled step declares as ``in_shardings`` —
+    instead of a locally re-derived one, so the feed and the step can never
+    disagree about placement.  Stale plans (from before an elastic mesh
+    resize) are detected by mesh mismatch and ignored until the session
+    adopts the re-derived plan.
+    """
 
     def __init__(self, data_axis: Optional[int] = None):
         self._forced = data_axis
         self._mesh = None
         self._rows = None
+        self._shardings: Dict[str, object] = {}
 
     def mesh_for(self, global_rows: int):
         import jax
@@ -75,27 +85,34 @@ class MeshFeeder:
     def n_feed_devices(self) -> int:
         return 0 if self._mesh is None else int(self._mesh.shape["data"])
 
-    def feed(self, batch: Dict[str, np.ndarray]) -> Dict:
-        """Place row-major host arrays onto the mesh, sharded over ``data``.
+    def adopt_shardings(self, shardings: Dict[str, object]) -> None:
+        """Adopt a ShardingPlan's per-key batch ``NamedSharding``s."""
+        self._shardings = dict(shardings)
 
-        Each mesh device receives only its own row chunk (``device_put`` of
-        a view), then the global array is assembled from the single-device
-        shards — no full-batch staging through device 0.
+    def feed(self, batch: Dict[str, np.ndarray]) -> Dict:
+        """Place row-major host arrays onto the mesh, per-shard.
+
+        Each mesh device receives only its own chunk (``device_put`` of a
+        view, sliced by the sharding's own index map), then the global array
+        is assembled from the single-device shards — no full-batch staging
+        through device 0.
         """
         import jax
         from jax.sharding import NamedSharding, PartitionSpec as P
 
         rows = next(iter(batch.values())).shape[0]
         mesh = self.mesh_for(rows)
-        d = int(mesh.shape["data"])
-        devices = mesh.devices.reshape(-1)
-        chunk = rows // d
         out: Dict[str, jax.Array] = {}
         for k, v in batch.items():
-            sharding = NamedSharding(mesh, P("data", *([None] * (v.ndim - 1))))
+            sharding = self._shardings.get(k)
+            if sharding is None or sharding.mesh != mesh:
+                # no (or stale) plan: default row sharding over ``data``
+                sharding = NamedSharding(
+                    mesh, P("data", *([None] * (v.ndim - 1)))
+                )
+            idx_map = sharding.addressable_devices_indices_map(v.shape)
             shards = [
-                jax.device_put(v[i * chunk:(i + 1) * chunk], dev)
-                for i, dev in enumerate(devices)
+                jax.device_put(v[idx], dev) for dev, idx in idx_map.items()
             ]
             out[k] = jax.make_array_from_single_device_arrays(
                 v.shape, sharding, shards

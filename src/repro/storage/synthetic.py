@@ -8,8 +8,7 @@ token ids with a linear-congruential position mix so the LM loss actually
 decreases during the end-to-end example runs.
 
 This module owns the canonical :class:`DataConfig` and
-:func:`synth_sequence`; :mod:`repro.data.pipeline` re-exports them for
-backward compatibility.  :class:`~repro.storage.flash.FlashDevice` spools
+:func:`synth_sequence`.  :class:`~repro.storage.flash.FlashDevice` spools
 exactly these samples onto memory-mapped files, which is what makes the two
 backends bit-identical (property-tested in ``tests/test_storage.py``).
 """

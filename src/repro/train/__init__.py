@@ -1,6 +1,14 @@
 """Training steps.  The old ``Trainer`` entry point is gone — construct a
-:class:`repro.api.Session` instead (``repro.train.trainer`` holds the
-raising stub with the migration map)."""
-from repro.train.steps import loss_fn, make_serve_step, make_train_step
+:class:`repro.api.Session` instead."""
+from repro.train.steps import (
+    abstract_train_state, build_sharding_plan, loss_fn, make_serve_step,
+    make_train_step,
+)
 
-__all__ = ["loss_fn", "make_train_step", "make_serve_step"]
+__all__ = [
+    "abstract_train_state",
+    "build_sharding_plan",
+    "loss_fn",
+    "make_serve_step",
+    "make_train_step",
+]

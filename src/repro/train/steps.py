@@ -5,6 +5,12 @@
 row-validity x token mask, summed and normalized GLOBALLY, so heterogeneous
 group batch sizes are numerically exact.  ``make_serve_step`` builds the
 one-token KV-cache decode step for the inference shapes.
+
+This module also owns the *abstract* train state (ShapeDtypeStruct trees for
+params / opt_state / batch — no allocation) and :func:`build_sharding_plan`,
+which resolves the logical-axis rule table against a live mesh into the
+:class:`~repro.api.artifacts.ShardingPlan` every downstream consumer
+(``Session.compile``, sharded init, meshfeed, checkpoint restore) reads.
 """
 from __future__ import annotations
 
@@ -14,12 +20,24 @@ from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.hetero import masked_mean_loss
+from repro.distributed.sharding import (
+    ShardingPlan, arg_shardings_for_tree, make_rules,
+)
 from repro.models.api import Model
 from repro.optim.optimizers import Optimizer, OptState
 
 PyTree = Any
+
+# logical axes of the Stannis training batch: rows over the dp-ish axes,
+# sequence replicated (SP long-context shards it via the seq_data rule)
+BATCH_AXES: Dict[str, Tuple[Optional[str], ...]] = {
+    "tokens": ("batch", "seq_data"),
+    "labels": ("batch", "seq_data"),
+    "loss_mask": ("batch", "seq_data"),
+}
 
 
 def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
@@ -120,3 +138,80 @@ def make_prefill_step(model: Model, cache_len: int) -> Callable:
         return model.prefill(params, tokens, cache_len, **kwargs)
 
     return prefill_step
+
+
+# ---------------------------------------------------------------------------
+# Abstract train state + the ShardingPlan builder
+# ---------------------------------------------------------------------------
+
+
+def abstract_opt_state(optimizer: Optimizer, params: PyTree) -> OptState:
+    """Optimizer state as ShapeDtypeStructs — ``eval_shape`` of the real
+    ``init``, so any optimizer (SGD's ``nu=None``, AdamW's two moments)
+    yields the exact state structure without allocating a byte."""
+    return jax.eval_shape(optimizer.init, params)
+
+
+def abstract_train_state(
+    model: Model, optimizer: Optimizer
+) -> Tuple[PyTree, PyTree, OptState]:
+    """(params, logical_axes, opt_state) as abstract trees (no allocation)."""
+    params, axes = model.init_params(abstract=True)
+    return params, axes, abstract_opt_state(optimizer, params)
+
+
+def abstract_batch(global_rows: int, seq_len: int) -> Dict[str, Any]:
+    """The Stannis batch as ShapeDtypeStructs (keys match ``BATCH_AXES``)."""
+    SDS = jax.ShapeDtypeStruct
+    return {
+        "tokens": SDS((global_rows, seq_len), jnp.int32),
+        "labels": SDS((global_rows, seq_len), jnp.int32),
+        "loss_mask": SDS((global_rows, seq_len), jnp.float32),
+    }
+
+
+def build_sharding_plan(
+    model: Model,
+    optimizer: Optimizer,
+    *,
+    mesh: Mesh,
+    global_rows: int,
+    seq_len: int,
+    extra_rules: Optional[Dict[str, Any]] = None,
+) -> ShardingPlan:
+    """Resolve the rule table against ``mesh`` into one ShardingPlan.
+
+    Size-aware (via :func:`arg_shardings_for_tree`): a dim a mesh axis does
+    not divide falls back to replicated on that dim, so the plan is valid as
+    jit ARGUMENT shardings on any mesh shape.  Optimizer moments reuse the
+    parameter shardings (same shapes, f32), the step counter and metrics are
+    replicated, and batch rows shard over the dp axes.
+    """
+    rules = make_rules(
+        fsdp=bool(getattr(model.cfg, "fsdp", False)), extra=extra_rules or None
+    )
+    rules.setdefault("seq_data", None)
+    replicated = NamedSharding(mesh, P())
+
+    params_abs, p_axes = model.init_params(abstract=True)
+    p_sh = arg_shardings_for_tree(p_axes, params_abs, rules, mesh)
+    opt_abs = abstract_opt_state(optimizer, params_abs)
+    opt_sh = OptState(
+        step=replicated,
+        mu=p_sh,
+        nu=None if opt_abs.nu is None else p_sh,
+    )
+    batch_abs = abstract_batch(global_rows, seq_len)
+    b_sh = arg_shardings_for_tree(BATCH_AXES, batch_abs, rules, mesh)
+
+    data_axis = int(mesh.shape.get("data", 1)) if "data" in mesh.axis_names else 1
+    return ShardingPlan(
+        mesh=mesh,
+        rules=rules,
+        params=p_sh,
+        opt=opt_sh,
+        batch=b_sh,
+        replicated=replicated,
+        global_rows=int(global_rows),
+        data_axis=data_axis,
+    )

@@ -102,7 +102,7 @@ def test_elastic_reshard_subprocess(tmp_path, tree):
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.compat import make_mesh
-        from repro.checkpoint.manager import restore
+        from repro.checkpoint.manager import restore, save
         like = {{
             "params": {{"w": jnp.zeros((8, 16)), "b": jnp.zeros(16)}},
             "opt": {{"mu": jnp.zeros((8, 16)), "step": jnp.int32(0)}},
@@ -118,6 +118,14 @@ def test_elastic_reshard_subprocess(tmp_path, tree):
             got, _ = restore({str(tmp_path)!r}, like, shardings=sh)
             assert got["params"]["w"].sharding.num_devices == dp
             assert int(got["opt"]["step"]) == 7
+        # sharded SAVE: per-shard host assembly must reproduce the logical
+        # array bit-exactly (save the dp=2-sharded tree, restore, compare)
+        ref, _ = restore({str(tmp_path)!r}, like)
+        save({str(tmp_path)!r}, 9, got)
+        back, _ = restore({str(tmp_path)!r}, like, step=9)
+        for a, b in zip(jax.tree_util.tree_leaves(ref),
+                        jax.tree_util.tree_leaves(back)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
         print("ELASTIC OK")
     """
     out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],

@@ -12,9 +12,9 @@ from repro.api import (
     TunePlan, WorkerJoined, WorkerLost,
 )
 from repro.configs import smoke_config
-from repro.data.pipeline import DataConfig
 from repro.models.api import get_model
 from repro.optim import adamw
+from repro.storage import DataConfig
 
 
 def _session(n_csds=2, steps=4, callbacks=None, seq_len=16):
@@ -257,7 +257,7 @@ def test_plan_override_keeps_compiled_step():
 
 
 def test_drift_keeps_dataset_consistent_with_placement():
-    from repro.data.pipeline import manifest_sources
+    from repro.storage import manifest_sources
 
     s = _session(n_csds=3)
     _ = s.dataset

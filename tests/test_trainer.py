@@ -1,7 +1,8 @@
 """Integration: the full Stannis pipeline (tune -> plan -> place -> train),
-fault tolerance (restart, node loss), the data-pipeline invariants, and the
-removed-``Trainer`` stub contract.  (This file kept its name through the
-Trainer -> Session migration so the tier-1 history lines up.)"""
+fault tolerance (restart, node loss), and the data-plane invariants.  (This
+file kept its name through the Trainer -> Session migration so the tier-1
+history lines up; the ``Trainer`` stub and the ``repro.data`` compat shim
+are deleted now that every caller is on ``Session`` + ``repro.storage``.)"""
 import os
 
 import jax
@@ -13,9 +14,9 @@ from repro.api import FleetSpec, Session, SessionConfig, DriftDetected, WorkerLo
 from repro.configs import smoke_config
 from repro.core.hetero import BatchSchedule
 from repro.core.privacy import Shard
-from repro.data.pipeline import DataConfig, PrivateShardStore, synth_sequence
 from repro.models.api import get_model
 from repro.optim import adamw
+from repro.storage import DataConfig, SyntheticDevice, synth_sequence
 
 
 def _spec(n_csds=2):
@@ -82,7 +83,7 @@ def test_retune_keeps_shapes():
 
 
 # ---------------------------------------------------------------------------
-# data pipeline (compat shim surface over repro.storage)
+# data plane (repro.storage)
 # ---------------------------------------------------------------------------
 
 
@@ -98,12 +99,14 @@ def test_synth_deterministic_across_processes():
 def test_private_store_enforces_ownership():
     cfg = DataConfig(vocab=100, seq_len=8)
     shards = [Shard("p", 10, True, "w0"), Shard("pub", 10, False)]
-    s0 = PrivateShardStore("w0", shards, cfg)
-    s1 = PrivateShardStore("w1", shards, cfg)
-    s0.sample("p", 0)           # owner: fine
-    s1.sample("pub", 0)         # public: fine
+    s0 = SyntheticDevice("w0", cfg)
+    s1 = SyntheticDevice("w1", cfg)
+    s0.provision(shards)
+    s1.provision(shards)
+    s0.read("p", 0)             # owner: fine
+    s1.read("pub", 0)           # public: fine
     with pytest.raises(PermissionError):
-        s1.sample("p", 0)       # private, non-owner: refused
+        s1.read("p", 0)         # private, non-owner: refused
 
 
 def test_dataset_layout_and_masks():
@@ -122,18 +125,18 @@ def test_dataset_layout_and_masks():
 
 
 # ---------------------------------------------------------------------------
-# the removed Trainer: a raising stub with a migration hint
+# the removed compat surfaces stay removed
 # ---------------------------------------------------------------------------
 
 
-def test_trainer_stub_raises_migration_hint():
-    from repro.train.trainer import Trainer, TrainerConfig
+def test_trainer_and_data_shims_are_gone():
+    """Two PRs of deprecation are over: the ``Trainer`` stub and the
+    ``repro.data`` pipeline shim no longer exist — stale imports fail at
+    import time, not at behavior drift."""
+    with pytest.raises(ImportError):
+        import repro.train.trainer  # noqa: F401
+    with pytest.raises(ImportError):
+        import repro.data.pipeline  # noqa: F401
+    import repro.train
 
-    with pytest.raises(DeprecationWarning, match="repro.api.Session"):
-        Trainer()
-    with pytest.raises(DeprecationWarning, match="Session"):
-        Trainer(model=None, optimizer=None, fleet=None,
-                data_cfg=None, cfg=None, shards=[])
-    # the config alias stays importable so old configs migrate in place
-    assert issubclass(TrainerConfig, SessionConfig)
-    assert TrainerConfig(total_steps=5).total_steps == 5
+    assert not hasattr(repro.train, "Trainer")
