@@ -110,6 +110,7 @@ def bench_one(backend: str, steps: int) -> Dict:
         "backend": backend,
         "arch": ARCH,
         "steps": steps,
+        "n_processes": 1,
         "steps_per_s": round(steps / dt, 3),
         "compile_count": s.compile_count,
         "init_s": round(init_s, 4),
@@ -124,8 +125,58 @@ def bench_one(backend: str, steps: int) -> Dict:
     }
 
 
-def run(steps: int = 8, out: str = "BENCH_step.json", verbose: bool = True):
+def bench_cluster(steps: int, processes: int = 2, local_devices: int = 4) -> Dict:
+    """The multi-PROCESS record: N worker processes, one global mesh,
+    per-host addressable feeding, coordinator-summed gradients (hostsync on
+    CPU).  Throughput is the slowest worker's — the cluster steps at the
+    barrier's pace."""
+    from repro.core.topology import ClusterSpec
+    from repro.launch.cluster import run_cluster
+
+    result = run_cluster(
+        ClusterSpec(processes=processes, local_devices=local_devices),
+        "repro.launch.cluster:demo_session_factory",
+        {"processes": processes, "n_csds": 3, "steps": steps,
+         "seq_len": SEQ_LEN, "arch": ARCH},
+        resume_steps=0,
+        timeout=900,
+    )
+    if not result.ok:
+        raise RuntimeError(
+            f"cluster bench failed: rc={result.returncodes} "
+            f"(logs under {result.run_dir})"
+        )
+    recs = result.records
+    r0 = result.record(0)
+    return {
+        "backend": "cluster",
+        "arch": ARCH,
+        "steps": steps,
+        "n_processes": processes,
+        "mode": r0["mode"],
+        "steps_per_s": min(r["steps_per_s"] for r in recs),
+        "compile_count": max(r["compile_count"] for r in recs),
+        "feed_bytes_per_step": sum(
+            r["receipt"]["bytes_put"] for r in recs if r["receipt"]
+        ),
+        "addressable_only": all(r["addressable_only"] for r in recs),
+        "local_fraction": r0["receipt"]["local_fraction"] if r0["receipt"] else 1.0,
+        "global_rows": r0["global_rows"],
+        "data_axis": r0["data_axis"],
+        "n_devices": r0["global_devices"],
+        "loss_final": float(recs[0]["losses"][-1]),
+        "losses_agree": all(
+            abs(a - b) < 1e-6
+            for a, b in zip(recs[0]["losses"], recs[-1]["losses"])
+        ),
+    }
+
+
+def run(steps: int = 8, out: str = "BENCH_step.json", verbose: bool = True,
+        cluster: bool = True):
     records = [bench_one(b, steps) for b in ("synthetic", "meshfeed")]
+    if cluster:
+        records.append(bench_cluster(steps))
     payload = {
         "bench": "step",
         "device_count": len(jax.devices()),
@@ -135,6 +186,16 @@ def run(steps: int = 8, out: str = "BENCH_step.json", verbose: bool = True):
         json.dump(payload, f, indent=1)
     if verbose:
         for r in records:
+            if r["backend"] == "cluster":
+                print(
+                    f"[{r['backend']:>9s}] {r['steps_per_s']:6.2f} steps/s  "
+                    f"compiles={r['compile_count']}  "
+                    f"procs={r['n_processes']} ({r['mode']})  "
+                    f"feed={r['feed_bytes_per_step']:,}B/step "
+                    f"addressable_only={r['addressable_only']}  "
+                    f"data_axis={r['data_axis']}/{r['n_devices']}dev"
+                )
+                continue
             print(
                 f"[{r['backend']:>9s}] {r['steps_per_s']:6.2f} steps/s  "
                 f"compiles={r['compile_count']}  "
@@ -149,13 +210,20 @@ def run(steps: int = 8, out: str = "BENCH_step.json", verbose: bool = True):
 
 def _checks(payload: Dict) -> Dict[str, bool]:
     recs = payload["records"]
+    cluster = [r for r in recs if r["backend"] == "cluster"]
     return {
         "one_compile_each": all(r["compile_count"] == 1 for r in recs),
-        "init_moves_zero_bytes": all(r["init_h2d_bytes"] == 0 for r in recs),
+        "init_moves_zero_bytes": all(
+            r["init_h2d_bytes"] == 0 for r in recs if "init_h2d_bytes" in r
+        ),
         "meshfeed_multidevice": any(
             r["backend"] == "meshfeed" and r["data_axis"] > 1 for r in recs
         ) or payload["device_count"] == 1,
         "losses_finite": all(np.isfinite(r["loss_final"]) for r in recs),
+        "cluster_addressable_only": all(
+            r["addressable_only"] for r in cluster
+        ),
+        "cluster_replicas_agree": all(r["losses_agree"] for r in cluster),
     }
 
 
@@ -163,8 +231,10 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=8)
     ap.add_argument("--out", default="BENCH_step.json")
+    ap.add_argument("--no-cluster", action="store_true",
+                    help="skip the 2-process cluster record")
     args = ap.parse_args()
-    payload = run(steps=args.steps, out=args.out)
+    payload = run(steps=args.steps, out=args.out, cluster=not args.no_cluster)
     checks = _checks(payload)
     print("checks:", checks)
     sys.exit(0 if all(checks.values()) else 1)

@@ -26,7 +26,17 @@ echo "[ci]   ShardingPlan (explicit in_shardings, not GSPMD defaults)"
 XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     PYTHONPATH=src python benchmarks/session_smoke.py --backend meshfeed
 
-echo "[ci] step benchmark (8-device CPU mesh) -> BENCH_step.json"
+echo "[ci] cluster smoke (2 worker PROCESSES x 4 fake devices each):"
+echo "[ci]   asserts every process device_put only ADDRESSABLE shards of"
+echo "[ci]   the global mesh (byte-exact receipts, no cross-host batch"
+echo "[ci]   bytes), compile_count stays 1 across a drift re-tune, and"
+echo "[ci]   save-at-2-processes/restore-at-1-process matches the"
+echo "[ci]   single-process loss curve (each worker sets its own"
+echo "[ci]   XLA_FLAGS=--xla_force_host_platform_device_count=4)"
+PYTHONPATH=src python benchmarks/cluster_smoke.py
+
+echo "[ci] step benchmark (8-device CPU mesh + 2-process cluster record)"
+echo "[ci]   -> BENCH_step.json"
 PYTHONPATH=src python benchmarks/bench_step.py --steps 4
 
 echo "[ci] OK"

@@ -22,19 +22,31 @@ from repro.api.events import (
     DriftDetected, FleetEvent, WorkerJoined, WorkerLost,
 )
 from repro.api.fleet import FleetSpec
+from repro.api.membership import (
+    DirMembershipSource, ElasticController, HeartbeatWriter, MemberInfo,
+    MembershipWatcher,
+)
 from repro.api.serving import GenerateResult, ServeSession
 from repro.api.session import Session, SessionConfig
+from repro.core.topology import ClusterSpec, ProcessMap
 from repro.storage import DeviceFleet, FleetManifest, StorageSpec
 
 __all__ = [
     "CallbackRegistry",
+    "ClusterSpec",
     "CompiledStep",
     "DeviceFleet",
+    "DirMembershipSource",
     "DriftDetected",
+    "ElasticController",
     "FleetEvent",
     "FleetManifest",
     "FleetSpec",
     "GenerateResult",
+    "HeartbeatWriter",
+    "MemberInfo",
+    "MembershipWatcher",
+    "ProcessMap",
     "ReplanResult",
     "ServeSession",
     "Session",

@@ -19,7 +19,9 @@ import dataclasses
 from typing import Any, List, Mapping, Optional, Tuple
 
 from repro.core.privacy import Shard
-from repro.core.topology import Fleet, WorkerClass, paper_fleet, tpu_fleet
+from repro.core.topology import (
+    ClusterSpec, Fleet, WorkerClass, paper_fleet, tpu_fleet,
+)
 from repro.storage import StorageSpec
 
 
@@ -42,6 +44,7 @@ class FleetSpec:
     name: str = "custom"
     storage: StorageSpec = dataclasses.field(default_factory=StorageSpec)
     sharding: Tuple[Tuple[str, Any], ...] = ()
+    cluster: Optional[ClusterSpec] = None
 
     # -- presets -----------------------------------------------------------
 
@@ -124,6 +127,28 @@ class FleetSpec:
         """
         return dataclasses.replace(
             self, storage=StorageSpec(backend=backend, **kw)
+        )
+
+    def with_cluster(self, processes: int, **kw) -> "FleetSpec":
+        """Run the fleet across ``processes`` worker PROCESSES, one global
+        mesh (see :mod:`repro.launch.cluster`):
+
+            FleetSpec.demo(3).with_cluster(processes=2, local_devices=4)
+
+        Each process provisions only its own dp-groups' storage devices and
+        ``device_put``s only its addressable slice of the plan's
+        ``NamedSharding``s.  The data plane needs mesh delivery, so a spec
+        still on the default ``synthetic`` backend is upgraded to
+        ``meshfeed``; an explicit host-delivery choice is left for
+        ``Session`` to reject with a clear error.
+        """
+        storage = self.storage
+        if storage.backend == "synthetic":
+            storage = dataclasses.replace(storage, backend="meshfeed")
+        return dataclasses.replace(
+            self,
+            cluster=ClusterSpec(processes=processes, **kw),
+            storage=storage,
         )
 
     def with_sharding(self, **rules: Any) -> "FleetSpec":

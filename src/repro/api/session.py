@@ -61,6 +61,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.api.artifacts import (
     CompiledStep, ReplanResult, ShardingPlan, TrainReport, TunePlan,
@@ -68,12 +69,12 @@ from repro.api.artifacts import (
 from repro.api.callbacks import CallbackRegistry
 from repro.api.events import DriftDetected, FleetEvent, WorkerJoined, WorkerLost
 from repro.api.fleet import FleetSpec
-from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.manager import CheckpointManager, ClusterCheckpointManager
 from repro.compat import set_mesh as compat_set_mesh
 from repro.core.hetero import BatchSchedule, schedule_from_tune
 from repro.core.load_balance import EpochPlan, plan_epoch
 from repro.core.privacy import PlacementManifest, Shard, place
-from repro.core.topology import Fleet
+from repro.core.topology import ClusterSpec, Fleet, ProcessMap
 from repro.core.tuner import BenchmarkFn, DriftMonitor, tune
 from repro.models.api import Model
 from repro.storage import (
@@ -81,11 +82,12 @@ from repro.storage import (
     make_fleet_batcher, manifest_sources,
 )
 from repro.distributed.sharding import use_rules
-from repro.launch.mesh import make_single_mesh
+from repro.launch.mesh import ClusterContext, make_single_mesh
 from repro.optim.optimizers import Optimizer
 from repro.optim.schedules import goyal_schedule
 from repro.train.steps import (
-    abstract_train_state, build_sharding_plan, make_train_step,
+    abstract_train_state, build_sharding_plan, make_apply_step,
+    make_partial_grad_step, make_train_step,
 )
 
 PyTree = Any
@@ -159,6 +161,15 @@ class Session:
         self.callbacks = callbacks or CallbackRegistry()
         # the storage data plane: explicit arg > FleetSpec.storage > default
         self.storage: StorageSpec = storage or spec_storage or StorageSpec()
+        # cluster mode: the spec travels on the FleetSpec; the live process
+        # identity (ClusterContext) is attached by the WorkerRuntime after
+        # the jax.distributed handshake.  No context attached = the
+        # repro.compat single-process fallback: same stages, one process.
+        self.cluster_spec: Optional[ClusterSpec] = (
+            fleet.cluster if isinstance(fleet, FleetSpec) else None
+        )
+        self._cluster: Optional[ClusterContext] = None
+        self._local_plan: Optional[ShardingPlan] = None
         # the device fleet persists across stage rebuilds — custody state
         # (quarantine tombstones, re-homed public shards) must survive
         # re-plans exactly like live membership does
@@ -184,6 +195,55 @@ class Session:
                 self._next_index.get(cls, 0), int(idx) + 1
             )
 
+    # -- cluster mode ------------------------------------------------------
+
+    @property
+    def cluster(self) -> Optional[ClusterContext]:
+        return self._cluster
+
+    def attach_cluster(self, ctx: ClusterContext) -> None:
+        """Bind this session to its worker-process identity (see
+        :class:`~repro.launch.mesh.ClusterContext`).  Must happen before the
+        first stage builds — custody and mesh resolution key off it."""
+        if self._artifacts or self._device_fleet is not None:
+            raise RuntimeError(
+                "attach_cluster() must run before any stage is built"
+            )
+        if self.storage.backend not in ("meshfeed",):
+            raise ValueError(
+                f"cluster execution needs a mesh-delivery storage backend, "
+                f"not {self.storage.backend!r} (use "
+                f"FleetSpec.with_cluster / with_storage('meshfeed'))"
+            )
+        self._cluster = ctx
+
+    def _is_cluster(self) -> bool:
+        return self._cluster is not None and self._cluster.n_processes > 1
+
+    def process_map(self) -> Optional[ProcessMap]:
+        """dp-group -> process custody (None outside cluster mode)."""
+        if not self._is_cluster():
+            return None
+        tp = self.tune()
+        pmap = ProcessMap(tp.group_workers, self._cluster.n_processes)
+        if pmap.n_groups % pmap.n_processes != 0:
+            raise ValueError(
+                f"{pmap.n_groups} dp-groups do not split evenly over "
+                f"{pmap.n_processes} processes — the mesh's equal row slabs "
+                f"would straddle process custody; size the fleet so "
+                f"groups % processes == 0"
+            )
+        return pmap
+
+    def _exec_plan(self) -> ShardingPlan:
+        """The plan the STEP runs on: the local (hostsync) compute plan in
+        a cluster whose backend cannot span processes, the global plan
+        everywhere else.  State (init, restore, adoption) follows it."""
+        plan = self.shard()
+        if self._is_cluster() and self._cluster.mode == "hostsync":
+            return self._local_plan
+        return plan
+
     # -- introspection -----------------------------------------------------
 
     @property
@@ -198,11 +258,16 @@ class Session:
 
     @property
     def devices(self) -> DeviceFleet:
-        """The live storage device fleet (provisioned on first access)."""
+        """The live storage device fleet (provisioned on first access).
+        In cluster mode only THIS process's dp-groups get real devices —
+        every other worker is a remote custody record."""
         if self._device_fleet is None:
             tp = self.tune()
+            pmap = self.process_map()
             self._device_fleet = DeviceFleet.provision(
                 tp.group_workers, self._shards, self.data, spec=self.storage,
+                process_map=pmap,
+                process_id=self._cluster.process_id if pmap else 0,
             )
         return self._device_fleet
 
@@ -339,21 +404,56 @@ class Session:
         if cached is not None and cached.global_rows != tp.schedule.global_rows:
             self._invalidate("shard")      # elastic mesh resize: re-derive
         if "shard" not in self._artifacts:
-            mesh = self.devices.feed_mesh(tp.schedule.global_rows)
+            rows = tp.schedule.global_rows
+            if self._is_cluster():
+                # the CLUSTER mesh: every process's devices, process-major,
+                # resolved identically in every process (the shared
+                # contract each worker feeds its addressable slice of)
+                mesh = self._cluster.global_mesh(rows)
+            else:
+                mesh = self.devices.feed_mesh(rows)
             if mesh is None:
                 # host-delivery backends: same code path on a 1x1 mesh
                 mesh = make_single_mesh()
             self._artifacts["shard"] = build_sharding_plan(
                 self.model, self.optimizer,
                 mesh=mesh,
-                global_rows=tp.schedule.global_rows,
+                global_rows=rows,
                 seq_len=self.data.seq_len,
                 extra_rules=self.sharding_overrides or None,
             )
+            self._local_plan = None
         plan = self._artifacts["shard"]
+        if (
+            self._is_cluster()
+            and self._cluster.mode == "hostsync"
+            and self._local_plan is None
+        ):
+            # the hostsync COMPUTE plan: this process's row slab on its own
+            # devices, chunked exactly like its share of the global mesh so
+            # the local view reuses the global feed's buffers
+            pmap = self.process_map()
+            start, stop = pmap.row_span(
+                self._cluster.process_id, tp.schedule.max_local
+            )
+            self._local_plan = build_sharding_plan(
+                self.model, self.optimizer,
+                mesh=self._cluster.local_mesh(
+                    stop - start,
+                    data_axis=plan.data_axis // self._cluster.n_processes,
+                ),
+                global_rows=stop - start,
+                seq_len=self.data.seq_len,
+                extra_rules=self.sharding_overrides or None,
+            )
         # (re-)hand the plan to the data plane: meshfeed lands every batch
         # with the plan's exact NamedShardings; idempotent for other backends
-        self.devices.adopt_plan(plan)
+        self.devices.adopt_plan(
+            plan,
+            self._local_plan
+            if self._is_cluster() and self._cluster.mode == "hostsync"
+            else None,
+        )
         return plan
 
     # -- stage 5: the jitted SPMD step ------------------------------------
@@ -383,41 +483,101 @@ class Session:
                 warmup_steps=self.config.warmup_steps,
                 total_steps=self.config.total_steps,
             )
-            step = make_train_step(
-                self.model, self.optimizer, sched,
-                aux_weight=self.config.aux_weight,
-            )
-            mesh = plan.mesh
+            if self._is_cluster() and self._cluster.mode == "hostsync":
+                step_fn, in_sh, out_sh = self._compile_hostsync(sched)
+            else:
+                step = make_train_step(
+                    self.model, self.optimizer, sched,
+                    aux_weight=self.config.aux_weight,
+                )
+                mesh = plan.mesh
 
-            def step_in_mesh(params, opt_state, batch):
-                # trace under the plan's mesh AND rule table so the model's
-                # logical-axis activation constraints resolve against the
-                # same (possibly overridden) rules that produced the
-                # argument shardings — not the module defaults
-                with use_rules(plan.rules), compat_set_mesh(mesh):
-                    return step(params, opt_state, batch)
+                def step_in_mesh(params, opt_state, batch):
+                    # trace under the plan's mesh AND rule table so the
+                    # model's logical-axis activation constraints resolve
+                    # against the same (possibly overridden) rules that
+                    # produced the argument shardings — not the defaults
+                    with use_rules(plan.rules), compat_set_mesh(mesh):
+                        return step(params, opt_state, batch)
 
-            in_shardings = (plan.params, plan.opt, plan.batch)
-            # metrics are scalars: plan.replicated is a pytree-prefix for
-            # the whole metrics dict
-            out_shardings = (plan.params, plan.opt, plan.replicated)
+                in_sh = (plan.params, plan.opt, plan.batch)
+                # metrics are scalars: plan.replicated is a pytree-prefix
+                # for the whole metrics dict
+                out_sh = (plan.params, plan.opt, plan.replicated)
+                step_fn = jax.jit(
+                    step_in_mesh,
+                    in_shardings=in_sh,
+                    out_shardings=out_sh,
+                    donate_argnums=(0, 1),
+                )
             self._compile_count += 1
             self._artifacts["compile"] = CompiledStep(
-                step_fn=jax.jit(
-                    step_in_mesh,
-                    in_shardings=in_shardings,
-                    out_shardings=out_shardings,
-                    donate_argnums=(0, 1),
-                ),
+                step_fn=step_fn,
                 global_rows=tp.schedule.global_rows,
                 seq_len=self.data.seq_len,
                 valid_rows=tp.schedule.valid_rows,
                 build_id=self._compile_count,
                 config_key=self._config_key(),
-                in_shardings=in_shardings,
-                out_shardings=out_shardings,
+                in_shardings=in_sh,
+                out_shardings=out_sh,
             )
         return self._artifacts["compile"]
+
+    def _compile_hostsync(self, sched):
+        """The cluster step for backends that cannot run cross-process XLA
+        programs: a jitted partial-gradient half over this process's local
+        plan, a host allreduce through the coordinator, and a jitted apply
+        half — one ``step_fn`` with the standard signature.  Numerically
+        the single-program step (see :func:`make_partial_grad_step`);
+        counts as ONE compile (the no-recompile probe spans both halves).
+        """
+        lp = self._local_plan
+        ctx = self._cluster
+        grad_step = make_partial_grad_step(
+            self.model, aux_weight=self.config.aux_weight
+        )
+        apply_step = make_apply_step(
+            self.optimizer, sched, aux_weight=self.config.aux_weight
+        )
+
+        def grad_in_mesh(params, batch):
+            with use_rules(lp.rules), compat_set_mesh(lp.mesh):
+                return grad_step(params, batch)
+
+        def apply_in_mesh(params, opt_state, grads, sums):
+            with use_rules(lp.rules), compat_set_mesh(lp.mesh):
+                return apply_step(params, opt_state, grads, sums)
+
+        jit_grad = jax.jit(
+            grad_in_mesh,
+            in_shardings=(lp.params, lp.batch),
+            out_shardings=(lp.params, lp.replicated),
+        )
+        jit_apply = jax.jit(
+            apply_in_mesh,
+            in_shardings=(lp.params, lp.opt, lp.params, lp.replicated),
+            out_shardings=(lp.params, lp.opt, lp.replicated),
+            donate_argnums=(0, 1),
+        )
+        counter = iter(range(1 << 62))
+
+        def step_fn(params, opt_state, batch):
+            grads, sums = jit_grad(params, batch)
+            if ctx.sync is not None:
+                host = jax.tree_util.tree_map(
+                    lambda x: np.asarray(jax.device_get(x)), (grads, sums)
+                )
+                # deterministic sum at the coordinator: every process gets
+                # identical totals, applies the identical update, and the
+                # replicas stay synchronized without a broadcast
+                grads, sums = ctx.sync.allreduce(
+                    f"step/{next(counter)}", host
+                )
+            return jit_apply(params, opt_state, grads, sums)
+
+        in_sh = (lp.params, lp.opt, lp.batch)
+        out_sh = (lp.params, lp.opt, lp.replicated)
+        return step_fn, in_sh, out_sh
 
     # -- sharded state construction / adoption ----------------------------
 
@@ -437,7 +597,7 @@ class Session:
         that out; ``benchmarks/bench_step.py`` proves the zero-transfer
         property under ``jax.transfer_guard("disallow")``).
         """
-        plan = plan or self.shard()
+        plan = plan or self._exec_plan()
         model = self.model
 
         def init_fn(key):
@@ -476,11 +636,22 @@ class Session:
         steps = steps or cfg.total_steps
 
         compiled = self.compile()
-        plan = self.shard()
-        ckpt = (
-            CheckpointManager(cfg.checkpoint_dir, keep=cfg.keep_checkpoints)
-            if cfg.checkpoint_dir else None
-        )
+        plan = self._exec_plan()
+        ckpt = None
+        if cfg.checkpoint_dir:
+            if self._is_cluster():
+                # coordinated save: single writer per shard, barrier at the
+                # coordinator, primary publishes — same call sites below
+                ckpt = ClusterCheckpointManager(
+                    cfg.checkpoint_dir, keep=cfg.keep_checkpoints,
+                    process_index=self._cluster.process_id,
+                    num_processes=self._cluster.n_processes,
+                    sync=self._cluster.sync,
+                )
+            else:
+                ckpt = CheckpointManager(
+                    cfg.checkpoint_dir, keep=cfg.keep_checkpoints
+                )
         start_step = 0
         if ckpt is not None and ckpt.latest_step() is not None:
             # restart-after-failure: resume the newest valid checkpoint,
@@ -496,6 +667,10 @@ class Session:
             )
             params, opt_state = state["params"], state["opt"]
             start_step = int(meta.get("step", ckpt.latest_step()))
+            # resume the SAMPLING state too: without the cursors a restart
+            # replays already-seen batches (and a restore-on-fewer-processes
+            # run would diverge from the uninterrupted one)
+            self.dataset.set_cursors(meta.get("cursors") or {})
         else:
             # no checkpoint: fresh state is BORN sharded (jitted init with
             # the plan as out_shardings); caller-supplied state (continuing
@@ -555,6 +730,7 @@ class Session:
                     metadata={
                         "step": i + 1,
                         "schedule": list(self.tune().schedule.group_batches),
+                        "cursors": dataset.cursors(),
                     },
                     async_=cfg.async_checkpoint,
                 )

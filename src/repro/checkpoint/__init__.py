@@ -1,3 +1,13 @@
-from repro.checkpoint.manager import CheckpointManager, restore, save
+from repro.checkpoint.manager import (
+    CheckpointManager, ClusterCheckpointManager, finalize_process_save,
+    restore, save, save_process,
+)
 
-__all__ = ["CheckpointManager", "save", "restore"]
+__all__ = [
+    "CheckpointManager",
+    "ClusterCheckpointManager",
+    "finalize_process_save",
+    "restore",
+    "save",
+    "save_process",
+]

@@ -23,6 +23,22 @@ Design (1000+-node requirements):
 
 Format: one ``.npy`` per leaf (key = '/'-joined path), ``manifest.json`` with
 tree structure, dtypes, shapes, CRCs, and user metadata (step, schedule, rng).
+
+Multi-process (cluster) checkpoints extend the same format with
+single-writer-per-shard coordination: every process calls
+:func:`save_process` — a leaf this process fully holds is written whole by
+the PRIMARY process only; a leaf sharded across processes (not fully
+addressable) is written as per-shard *chunk* files, each by the one process
+whose addressable shard carries ``replica_id == 0`` — so every byte of the
+checkpoint has exactly one writer and nothing is gathered across hosts.
+Each process stamps a partial ``manifest.p<N>.json``; after a barrier the
+primary calls :func:`finalize_process_save`, which merges the partials,
+verifies every leaf is fully covered (a missing process can never
+CRC-stamp a hole as valid), writes the standard ``manifest.json`` (chunked
+entries carry a ``chunks`` list), and atomically publishes.  :func:`restore`
+reads both layouts — so a checkpoint saved by N processes restores onto ANY
+mesh shape, including a different process count (the elastic
+save-at-2-processes / restore-at-1-process path).
 """
 from __future__ import annotations
 
@@ -108,6 +124,175 @@ def _host_leaf(leaf: Any) -> np.ndarray:
     return np.asarray(jax.device_get(leaf))
 
 
+def _crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+
+
+def _index_to_json(index, shape) -> List[List[int]]:
+    """A shard's index (tuple of slices) as [[start, stop], ...] per dim."""
+    out = []
+    for d, sl in enumerate(index):
+        start = 0 if sl.start is None else int(sl.start)
+        stop = shape[d] if sl.stop is None else int(sl.stop)
+        out.append([start, stop])
+    for d in range(len(index), len(shape)):
+        out.append([0, shape[d]])
+    return out
+
+
+def _owned_chunks(leaf: "jax.Array") -> List[Tuple[List[List[int]], np.ndarray]]:
+    """The (index, host_array) pieces THIS process is the single writer of.
+
+    One writer per shard: the addressable copies with ``replica_id == 0``.
+    Replicated leaves therefore have exactly one writer fleet-wide; data
+    shards are written by the process that computes them.
+    """
+    shape = tuple(leaf.shape)
+    out = []
+    seen = set()
+    for s in leaf.addressable_shards:
+        if getattr(s, "replica_id", 0) != 0:
+            continue
+        key = str(s.index)
+        if key in seen:
+            continue
+        seen.add(key)
+        out.append((_index_to_json(s.index, shape), np.asarray(s.data)))
+    return out
+
+
+def save_process(
+    directory: str,
+    step: int,
+    tree: PyTree,
+    *,
+    process_index: int,
+    num_processes: int,
+    metadata: Optional[Dict[str, Any]] = None,
+) -> str:
+    """One process's share of a coordinated multi-process save.
+
+    Writes into the SHARED ``step_N.tmp/`` staging dir (all processes see
+    one filesystem — the paper's host-attached fabric): whole leaves from
+    the primary, per-shard chunks from their single writers, plus this
+    process's partial manifest.  Publish happens only in
+    :func:`finalize_process_save` after every process has stamped its
+    partial — callers barrier between the two.
+    """
+    os.makedirs(directory, exist_ok=True)
+    tmp = os.path.join(directory, f"step_{step:010d}.tmp")
+    os.makedirs(tmp, exist_ok=True)
+
+    entries: Dict[str, Any] = {}
+    for key, leaf in _flatten_with_paths(tree):
+        fn_base = key.replace("/", "__")
+        fully = (
+            not isinstance(leaf, jax.Array)
+            or not hasattr(leaf, "addressable_shards")
+            or getattr(leaf, "is_fully_addressable", True)
+        )
+        if fully:
+            if process_index != 0:
+                continue               # primary is the single writer
+            arr = _host_leaf(leaf)
+            fn = fn_base + ".npy"
+            np.save(os.path.join(tmp, fn), arr)
+            entries[key] = {
+                "file": fn, "shape": list(arr.shape),
+                "dtype": str(arr.dtype), "crc32": _crc(arr),
+            }
+        else:
+            chunks = []
+            for i, (index, arr) in enumerate(_owned_chunks(leaf)):
+                fn = f"{fn_base}__p{process_index}_{i}.npy"
+                np.save(os.path.join(tmp, fn), arr)
+                chunks.append({
+                    "file": fn, "index": index, "crc32": _crc(arr),
+                })
+            if chunks:
+                entries[key] = {
+                    "chunks": chunks,
+                    "shape": list(leaf.shape),
+                    "dtype": str(np.dtype(leaf.dtype)),
+                }
+    partial = {
+        "step": step,
+        "process": process_index,
+        "num_processes": num_processes,
+        "entries": entries,
+        "metadata": metadata or {},
+    }
+    with open(os.path.join(tmp, f"manifest.p{process_index}.json"), "w") as f:
+        json.dump(partial, f, indent=1)
+    return tmp
+
+
+def finalize_process_save(
+    directory: str,
+    step: int,
+    *,
+    num_processes: int,
+    keys: Optional[List[str]] = None,
+) -> str:
+    """Merge the per-process partial manifests and publish atomically.
+
+    Called by the PRIMARY after a barrier.  Verifies every process stamped
+    its partial and — for chunked leaves — that the chunks tile the full
+    logical array (no process's share can silently go missing).  ``keys``
+    optionally pins the expected leaf set.
+    """
+    tmp = os.path.join(directory, f"step_{step:010d}.tmp")
+    final = os.path.join(directory, f"step_{step:010d}")
+    merged: Dict[str, Any] = {}
+    metadata: Dict[str, Any] = {}
+    for p in range(num_processes):
+        pf = os.path.join(tmp, f"manifest.p{p}.json")
+        if not os.path.isfile(pf):
+            raise FileNotFoundError(
+                f"process {p} never stamped its partial manifest in {tmp}"
+            )
+        with open(pf) as f:
+            partial = json.load(f)
+        metadata.update(partial.get("metadata") or {})
+        for key, e in partial["entries"].items():
+            if "chunks" not in e:
+                if key in merged:
+                    raise ValueError(f"two writers for whole leaf {key!r}")
+                merged[key] = e
+            else:
+                slot = merged.setdefault(key, {
+                    "chunks": [], "shape": e["shape"], "dtype": e["dtype"],
+                })
+                if "chunks" not in slot or slot["shape"] != e["shape"]:
+                    raise ValueError(f"mixed layouts for leaf {key!r}")
+                slot["chunks"].extend(e["chunks"])
+    if keys is not None:
+        missing = set(keys) - set(merged)
+        if missing:
+            raise ValueError(f"checkpoint missing leaves: {sorted(missing)}")
+    for key, e in merged.items():
+        if "chunks" not in e:
+            continue
+        size = int(np.prod(e["shape"])) if e["shape"] else 1
+        covered = sum(
+            int(np.prod([b - a for a, b in c["index"]])) if c["index"] else 1
+            for c in e["chunks"]
+        )
+        if covered != size:
+            raise ValueError(
+                f"chunks of {key!r} cover {covered} of {size} elements"
+            )
+    manifest = {"step": step, "entries": merged, "metadata": metadata}
+    with open(os.path.join(tmp, _MANIFEST), "w") as f:
+        json.dump(manifest, f, indent=1)
+    for p in range(num_processes):        # partials are staging-only
+        os.remove(os.path.join(tmp, f"manifest.p{p}.json"))
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic publish
+    return final
+
+
 def save(
     directory: str,
     step: int,
@@ -149,6 +334,29 @@ def save(
     return final
 
 
+def _entry_files(e: Dict[str, Any]) -> List[Tuple[str, int]]:
+    """(file, crc) pairs of an entry, whole-leaf or chunked."""
+    if "chunks" in e:
+        return [(c["file"], c["crc32"]) for c in e["chunks"]]
+    return [(e["file"], e["crc32"])]
+
+
+def _load_entry(path: str, e: Dict[str, Any], verify_crc: bool) -> np.ndarray:
+    """Materialize one manifest entry (assembling chunks if needed)."""
+    if "chunks" not in e:
+        arr = np.load(os.path.join(path, e["file"]))
+        if verify_crc and _crc(arr) != e["crc32"]:
+            raise IOError(f"CRC mismatch for {e['file']} in {path}")
+        return arr
+    out = np.empty(tuple(e["shape"]), np.dtype(e["dtype"]))
+    for c in e["chunks"]:
+        piece = np.load(os.path.join(path, c["file"]))
+        if verify_crc and _crc(piece) != c["crc32"]:
+            raise IOError(f"CRC mismatch for {c['file']} in {path}")
+        out[tuple(slice(a, b) for a, b in c["index"])] = piece
+    return out
+
+
 def _is_valid(path: str, verify_crc: bool = False) -> bool:
     mf = os.path.join(path, _MANIFEST)
     if not os.path.isfile(mf):
@@ -157,12 +365,11 @@ def _is_valid(path: str, verify_crc: bool = False) -> bool:
         with open(mf) as f:
             manifest = json.load(f)
         for key, e in manifest["entries"].items():
-            fp = os.path.join(path, e["file"])
-            if not os.path.isfile(fp):
-                return False
-            if verify_crc:
-                arr = np.load(fp)
-                if (zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF) != e["crc32"]:
+            for fn, crc in _entry_files(e):
+                fp = os.path.join(path, fn)
+                if not os.path.isfile(fp):
+                    return False
+                if verify_crc and _crc(np.load(fp)) != crc:
                     return False
         return True
     except Exception:
@@ -214,11 +421,7 @@ def restore(
         if key not in entries:
             raise KeyError(f"checkpoint {path} missing leaf {key!r}")
         e = entries[key]
-        arr = np.load(os.path.join(path, e["file"]))
-        if verify_crc:
-            crc = zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
-            if crc != e["crc32"]:
-                raise IOError(f"CRC mismatch for {key} in {path}")
+        arr = _load_entry(path, e, verify_crc)
         want_shape = tuple(getattr(ref, "shape", arr.shape))
         if tuple(arr.shape) != want_shape:
             raise ValueError(
@@ -289,3 +492,42 @@ class CheckpointManager:
         for s in steps[: -self.keep]:
             shutil.rmtree(os.path.join(self.directory, f"step_{s:010d}"),
                           ignore_errors=True)
+
+
+@dataclasses.dataclass
+class ClusterCheckpointManager(CheckpointManager):
+    """Coordinated multi-process saves behind the CheckpointManager API.
+
+    Each process holds one of these; ``save`` runs the single-writer
+    protocol (:func:`save_process` everywhere -> barrier -> primary
+    :func:`finalize_process_save` + rotate -> barrier), so a ``Session`` in
+    cluster mode checkpoints through exactly the same call sites as a
+    single-process one.  Saves are synchronous — the cross-process barrier
+    IS the stall, a background thread would just hide a torn save.
+
+    ``sync`` duck-types the coordinator transport
+    (``barrier(tag)``); ``process_index == 0`` is the primary.
+    """
+
+    process_index: int = 0
+    num_processes: int = 1
+    sync: Any = None
+
+    def _barrier(self, tag: str):
+        if self.sync is not None and self.num_processes > 1:
+            self.sync.barrier(tag)
+
+    def save(self, step: int, tree: PyTree, metadata=None, *, async_: bool = False):
+        save_process(
+            self.directory, step, tree,
+            process_index=self.process_index,
+            num_processes=self.num_processes,
+            metadata=metadata,
+        )
+        self._barrier(f"ckpt-stamp/{step}")
+        if self.process_index == 0:
+            finalize_process_save(
+                self.directory, step, num_processes=self.num_processes,
+            )
+            self._rotate()
+        self._barrier(f"ckpt-publish/{step}")

@@ -16,6 +16,23 @@ instead of feature-testing jax inline:
     ``with_sharding_constraint``: bare spec under an abstract mesh,
     ``NamedSharding`` when the mesh is physical (0.4.x requirement outside
     a mesh context).
+
+Multi-process (cluster) execution goes through the same funnel:
+
+  * :func:`distributed_initialize` — the ``jax.distributed.initialize``
+    handshake with a single-process fallback: when the runtime has no
+    ``jax.distributed`` (or the coordinator is unreachable) the caller gets
+    ``False`` back and runs the exact same code path on one process.
+  * :func:`process_index` / :func:`process_count` — safe on every jax
+    generation, before or after distributed init.
+  * :func:`multiprocess_compute_supported` — whether jit computations may
+    SPAN processes on this backend.  CPU jaxlib can hold a global mesh,
+    build per-host addressable shards, and assemble global arrays — but not
+    execute a cross-process XLA program ("Multiprocess computations aren't
+    implemented on the CPU backend").  The cluster runtime
+    (:mod:`repro.launch.cluster`) keys its execution strategy off this:
+    global-SPMD where supported, host-synchronized partial gradients
+    (the paper's host-aggregation topology) where not.
 """
 from __future__ import annotations
 
@@ -83,6 +100,65 @@ def axis_size(axis_name: str) -> int:
         return jax.lax.axis_size(axis_name)
     frame = jax.core.axis_frame(axis_name)  # type: ignore[attr-defined]
     return frame if isinstance(frame, int) else frame.size
+
+
+def process_index() -> int:
+    """This process's id in the distributed job (0 when single-process)."""
+    try:
+        return int(jax.process_index())
+    except Exception:
+        return 0
+
+
+def process_count() -> int:
+    """How many processes share the global device view (1 single-process)."""
+    try:
+        return int(jax.process_count())
+    except Exception:
+        return 1
+
+
+def distributed_initialize(
+    coordinator_address: str, num_processes: int, process_id: int,
+) -> bool:
+    """``jax.distributed.initialize`` with a single-process fallback.
+
+    Returns True when the handshake succeeded and the runtime now holds the
+    GLOBAL device view (``jax.devices()`` spans all processes,
+    ``jax.local_devices()`` is this host's slice).  Returns False when the
+    runtime cannot do distributed init at all (no ``jax.distributed``) —
+    callers then run the identical code on the single-process view.
+    Idempotent: a second call on an initialized runtime is a no-op True.
+    """
+    if num_processes <= 1:
+        return False
+    dist = getattr(jax, "distributed", None)
+    if dist is None or not hasattr(dist, "initialize"):
+        return False
+    # NB: do NOT probe jax.process_count() here — it initializes the
+    # backend, after which jax.distributed refuses the handshake
+    state = getattr(dist, "global_state", None)
+    if state is not None and getattr(state, "client", None) is not None:
+        return True          # already initialized (e.g. by the launcher)
+    dist.initialize(
+        coordinator_address=coordinator_address,
+        num_processes=num_processes,
+        process_id=process_id,
+    )
+    return True
+
+
+def multiprocess_compute_supported() -> bool:
+    """Can a single jit computation span processes on this backend?
+
+    CPU jaxlib supports the distributed *service* (handshake, global device
+    view, cross-process array metadata) but refuses to execute multiprocess
+    XLA programs.  TPU/GPU backends execute them natively.
+    """
+    try:
+        return jax.default_backend() != "cpu"
+    except Exception:
+        return False
 
 
 def constraint_sharding(

@@ -247,3 +247,90 @@ def fleet_throughput(
     t = distributed_step_time(fleet, batches, n_params, bytes_per_param, overlap)
     total = sum(c.count * batches.get(c.name, 0) for c in fleet.classes)
     return total / t if t > 0 and not math.isinf(t) else 0.0
+
+
+# ---------------------------------------------------------------------------
+# Cluster process topology
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ProcessMap:
+    """dp-group -> worker-process assignment for multi-process execution.
+
+    The Stannis global batch is group-major: group ``g`` owns rows
+    ``[g*max_local, (g+1)*max_local)``.  A cluster of ``n_processes`` worker
+    processes splits the groups into contiguous blocks (``g * P // G``), so a
+    process's rows are one contiguous span of the global batch — exactly the
+    slab its addressable mesh devices cover when the ``data`` axis is laid
+    out process-major (jax's device order).  Each process provisions storage
+    devices (shard custody) ONLY for its own groups; every other group is a
+    remote record in the manifest.
+    """
+
+    group_workers: Tuple[str, ...]
+    n_processes: int
+
+    def __post_init__(self):
+        if self.n_processes < 1:
+            raise ValueError(f"n_processes must be >= 1, got {self.n_processes}")
+        if self.n_processes > max(1, len(self.group_workers)):
+            raise ValueError(
+                f"{self.n_processes} processes but only "
+                f"{len(self.group_workers)} dp-groups — a worker process with "
+                f"no group custody has nothing to feed"
+            )
+
+    @property
+    def n_groups(self) -> int:
+        return len(self.group_workers)
+
+    def process_of_group(self, g: int) -> int:
+        if not 0 <= g < self.n_groups:
+            raise IndexError(g)
+        return g * self.n_processes // self.n_groups
+
+    def process_of(self, worker: str) -> int:
+        return self.process_of_group(self.group_workers.index(worker))
+
+    def local_groups(self, process: int) -> range:
+        g0 = math.ceil(process * self.n_groups / self.n_processes)
+        g1 = math.ceil((process + 1) * self.n_groups / self.n_processes)
+        return range(g0, g1)
+
+    def local_workers(self, process: int) -> Tuple[str, ...]:
+        return tuple(self.group_workers[g] for g in self.local_groups(process))
+
+    def row_span(self, process: int, max_local: int) -> Tuple[int, int]:
+        """This process's contiguous [start, stop) row window of the global
+        batch (group-major layout, ``max_local`` rows per group)."""
+        groups = self.local_groups(process)
+        return groups.start * max_local, groups.stop * max_local
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    """Declarative multi-process execution: how many worker processes, and
+    how they find each other.  Carried by ``FleetSpec.with_cluster`` so one
+    line turns a single-process session into a cluster launch.
+
+    ``local_devices`` is the per-process accelerator count (0 = whatever
+    the process already sees; smoke rigs force N fake CPU devices via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).  Ports of 0
+    auto-pick free ones at launch.  ``membership_dir`` is where worker
+    heartbeats land for the :class:`~repro.api.membership.MembershipWatcher`
+    (a fresh tempdir when omitted).
+    """
+
+    processes: int = 1
+    local_devices: int = 0
+    coordinator_port: int = 0
+    sync_port: int = 0
+    membership_dir: Optional[str] = None
+    heartbeat_interval: float = 0.25
+
+    def __post_init__(self):
+        if self.processes < 1:
+            raise ValueError(
+                f"cluster needs >= 1 process, got {self.processes}"
+            )

@@ -286,6 +286,18 @@ def with_logical_constraint(x: jax.Array, *axes: Optional[str]) -> jax.Array:
 _WARNED_CONSTRAINTS: set = set()
 
 
+def reset_constraint_warnings() -> None:
+    """Clear the warn-once cache of :func:`with_logical_constraint`.
+
+    The cache is process-global by design (a production run warns once per
+    (spec, mesh), ever), which makes the WARNING itself order-dependent in
+    a test suite: whichever test first triggers a given key eats the
+    warning for everyone after it.  Tests that assert the warning call this
+    first so the assertion holds under any test ordering.
+    """
+    _WARNED_CONSTRAINTS.clear()
+
+
 def _warn_constraint_skipped(axes, clean, mesh, err) -> None:
     key = (
         tuple(axes),

@@ -8,6 +8,13 @@ for this host.
   PYTHONPATH=src python -m repro.launch.train --arch deepseek-7b --steps 50
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-moe-30b-a3b \\
       --steps 20 --csds 4 --measured-tune
+
+Cluster mode launches N worker PROCESSES feeding one global mesh (see
+:mod:`repro.launch.cluster`); each provisions only its own dp-groups'
+storage devices and feeds only its addressable mesh slice:
+
+  PYTHONPATH=src python -m repro.launch.train --arch deepseek-7b \\
+      --steps 20 --csds 3 --cluster-processes 2 --cluster-local-devices 4
 """
 from __future__ import annotations
 
@@ -25,6 +32,77 @@ from repro.models.api import get_model
 from repro.optim import adamw, sgd_momentum
 
 
+def train_session_factory(
+    *,
+    arch: str = "deepseek-7b",
+    steps: int = 30,
+    seq: int = 64,
+    csds: int = 2,
+    full_config: bool = False,
+    optimizer: str = "adamw",
+    checkpoint_dir=None,
+    seed: int = 0,
+    cluster_processes: int = 1,
+) -> Session:
+    """The driver's session, importable by name from cluster workers."""
+    cfg = get_config(arch) if full_config else smoke_config(arch)
+    spec = FleetSpec.demo(
+        csds, host_tput=80.0, csd_tput=10.0,
+        host_max_batch=64, csd_max_batch=8,
+        host_idle=100.0, csd_idle=1.5,
+    )
+    if cluster_processes > 1:
+        spec = spec.with_cluster(processes=cluster_processes)
+    return Session(
+        model=get_model(cfg),
+        optimizer=adamw() if optimizer == "adamw" else sgd_momentum(),
+        fleet=spec,
+        data=DataConfig(vocab=cfg.vocab, seq_len=seq, seed=seed),
+        config=SessionConfig(
+            total_steps=steps,
+            checkpoint_dir=checkpoint_dir,
+            seed=seed,
+        ),
+        shards=spec.shards(private_per_worker={"csd": 256}, public=65536),
+    )
+
+
+def _run_cluster(args) -> int:
+    from repro.core.topology import ClusterSpec
+    from repro.launch.cluster import run_cluster
+
+    result = run_cluster(
+        ClusterSpec(
+            processes=args.cluster_processes,
+            local_devices=args.cluster_local_devices,
+        ),
+        "repro.launch.train:train_session_factory",
+        {
+            "arch": args.arch, "steps": args.steps, "seq": args.seq,
+            "csds": args.csds, "full_config": args.full_config,
+            "optimizer": args.optimizer,
+            "checkpoint_dir": args.checkpoint_dir, "seed": args.seed,
+            "cluster_processes": args.cluster_processes,
+        },
+    )
+    for rec in result.records:
+        print(
+            f"[proc {rec['process']}/{rec['n_processes']} {rec['mode']}] "
+            f"workers={rec['local_workers']} "
+            f"devices={rec['receipt']['devices'] if rec['receipt'] else '-'} "
+            f"local_rows={rec['receipt']['rows_local'] if rec['receipt'] else '-'}"
+            f"/{rec['global_rows']} compiles={rec['compile_count']}"
+        )
+        if rec["losses"]:
+            print(f"  loss {rec['losses'][0]:.4f} -> {rec['losses'][-1]:.4f} "
+                  f"addressable_only={rec['addressable_only']}")
+    if not result.ok:
+        print(f"cluster failed: returncodes={result.returncodes} "
+              f"(worker logs under {result.run_dir})", file=sys.stderr)
+        return 1
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="deepseek-7b", choices=ARCHS)
@@ -38,7 +116,14 @@ def main(argv=None) -> int:
     ap.add_argument("--measured-tune", action="store_true",
                     help="tune with real step timings instead of the analytic model")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--cluster-processes", type=int, default=1,
+                    help="launch N worker processes feeding one global mesh")
+    ap.add_argument("--cluster-local-devices", type=int, default=0,
+                    help="force this many (fake CPU) devices per process")
     args = ap.parse_args(argv)
+
+    if args.cluster_processes > 1:
+        return _run_cluster(args)
 
     cfg = get_config(args.arch) if args.full_config else smoke_config(args.arch)
     model = get_model(cfg)

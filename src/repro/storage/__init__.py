@@ -34,7 +34,9 @@ from repro.storage.fleet import (
     BACKENDS, DeviceFleet, DeviceRecord, FleetBatcher, FleetManifest,
     StorageSpec, make_fleet_batcher, manifest_sources,
 )
-from repro.storage.meshfeed import MeshFeedDevice, MeshFeeder, data_axis_size
+from repro.storage.meshfeed import (
+    FeedReceipt, MeshFeedDevice, MeshFeeder, data_axis_size,
+)
 from repro.storage.synthetic import DataConfig, SyntheticDevice, synth_sequence
 
 __all__ = [
@@ -43,6 +45,7 @@ __all__ = [
     "DataConfig",
     "DeviceFleet",
     "DeviceRecord",
+    "FeedReceipt",
     "FlashDevice",
     "FleetBatcher",
     "FleetManifest",

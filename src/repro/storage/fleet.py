@@ -33,6 +33,7 @@ import numpy as np
 
 from repro.core.hetero import BatchSchedule
 from repro.core.privacy import CustodyEvent, PlacementManifest, Shard
+from repro.core.topology import ProcessMap
 from repro.storage.device import BaseStorageDevice, StorageDevice
 from repro.storage.flash import FlashDevice
 from repro.storage.meshfeed import MeshFeedDevice, MeshFeeder
@@ -68,21 +69,36 @@ class StorageSpec:
 
 @dataclasses.dataclass(frozen=True)
 class DeviceRecord:
-    """One device's custody summary inside a :class:`FleetManifest`."""
+    """One device's custody summary inside a :class:`FleetManifest`.
+
+    ``process`` is the worker PROCESS that owns the device in a cluster
+    (0 single-process).  A record whose backend is ``"remote"`` describes a
+    device provisioned by ANOTHER process: this process knows it exists
+    (the manifest is the shared placement contract) but holds no custody
+    for it — its shard bytes never enter this process.
+    """
 
     worker: str
     backend: str
     custody: Tuple[str, ...]       # shard ids this device is custodian of
     n_samples: int                 # total samples under custody
+    process: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
 class FleetManifest(PlacementManifest):
-    """Fleet-aware placement: core assignments + per-device custody."""
+    """Fleet-aware placement: core assignments + per-device custody.
+
+    Process-aware in cluster mode: ``n_processes`` / ``local_process``
+    situate the manifest, :meth:`local_devices` /
+    :meth:`devices_of_process` split the records by owner process.
+    """
 
     devices: Tuple[DeviceRecord, ...] = ()
     backend: str = "synthetic"
     quarantined: Tuple[str, ...] = ()
+    n_processes: int = 1
+    local_process: int = 0
 
     def device_for(self, worker: str) -> Optional[DeviceRecord]:
         for d in self.devices:
@@ -90,18 +106,38 @@ class FleetManifest(PlacementManifest):
                 return d
         return None
 
+    def devices_of_process(self, process: int) -> Tuple[DeviceRecord, ...]:
+        return tuple(d for d in self.devices if d.process == process)
+
+    def local_devices(self) -> Tuple[DeviceRecord, ...]:
+        """Records this process actually provisioned (never ``remote``)."""
+        return tuple(
+            d for d in self.devices
+            if d.process == self.local_process and d.backend != "remote"
+        )
+
 
 class DeviceFleet:
     """Worker-id-keyed registry of storage devices (see module docstring)."""
 
-    def __init__(self, cfg: DataConfig, spec: Optional[StorageSpec] = None):
+    def __init__(
+        self,
+        cfg: DataConfig,
+        spec: Optional[StorageSpec] = None,
+        *,
+        process_map: Optional[ProcessMap] = None,
+        process_id: int = 0,
+    ):
         self.cfg = cfg
         self.spec = spec or StorageSpec()
         self._devices: Dict[str, BaseStorageDevice] = {}
+        self._remote: Dict[str, int] = {}           # worker -> owner process
         self._shards: Dict[str, Shard] = {}
         self._custody: Dict[str, str] = {}          # shard_id -> custodian
         self.quarantined: set = set()
         self.custody_log: List[CustodyEvent] = []
+        self.process_map = process_map
+        self.process_id = int(process_id)
         self._flash_root = (
             (self.spec.root or tempfile.mkdtemp(prefix="repro-flash-"))
             if self.spec.backend == "flash" else None
@@ -120,13 +156,30 @@ class DeviceFleet:
         shards: Sequence[Shard],
         cfg: DataConfig,
         spec: Optional[StorageSpec] = None,
+        *,
+        process_map: Optional[ProcessMap] = None,
+        process_id: int = 0,
     ) -> "DeviceFleet":
-        fleet = cls(cfg, spec)
+        fleet = cls(cfg, spec, process_map=process_map, process_id=process_id)
         for s in shards:
             fleet.register_shard(s)
         for w in workers:
             fleet.provision_worker(w)
         return fleet
+
+    def is_local(self, worker: str) -> bool:
+        """Does THIS process own ``worker``'s storage device?
+
+        Always True single-process.  A worker unknown to the process map
+        (joined after the map was built) defaults to local — the elastic
+        controller that applies joins holds the full view.
+        """
+        if self.process_map is None:
+            return True
+        try:
+            return self.process_map.process_of(worker) == self.process_id
+        except ValueError:
+            return True
 
     def register_shard(self, shard: Shard) -> None:
         self._shards[shard.shard_id] = shard
@@ -139,10 +192,18 @@ class DeviceFleet:
             return FlashDevice(worker, self.cfg, root=self._flash_root)
         return klass(worker, self.cfg)
 
-    def provision_worker(self, worker: str) -> StorageDevice:
-        """WorkerJoined: bring up a fresh device holding the live shard set."""
+    def provision_worker(self, worker: str) -> Optional[StorageDevice]:
+        """WorkerJoined: bring up a fresh device holding the live shard set.
+
+        In a cluster, a worker owned by ANOTHER process gets a remote
+        record only — its shard bytes never enter this process (the
+        addressable-custody half of the no-cross-host invariant)."""
         if worker in self._devices:
             return self._devices[worker]
+        if not self.is_local(worker):
+            self._remote[worker] = self.process_map.process_of(worker)
+            return None
+        self._remote.pop(worker, None)
         dev = self._make_device(worker)
         dev.provision(list(self._shards.values()))
         for sid in self.quarantined:
@@ -171,6 +232,7 @@ class DeviceFleet:
         dead_set = set(dead)
         dead_devices: Dict[str, BaseStorageDevice] = {}
         for w in dead_set:
+            self._remote.pop(w, None)
             dev = self._devices.pop(w, None)
             if dev is not None:
                 dead_devices[w] = dev
@@ -243,7 +305,13 @@ class DeviceFleet:
     # -- manifest / delivery ------------------------------------------------
 
     def manifest(self, core: PlacementManifest) -> FleetManifest:
-        """Wrap the core privacy manifest with per-device custody records."""
+        """Wrap the core privacy manifest with per-device custody records.
+
+        Process-aware: locally provisioned devices carry their owner
+        process and real custody; workers owned by other processes appear
+        as ``remote`` records with empty custody — this process can audit
+        the full placement without ever holding the bytes."""
+        pmap, pid = self.process_map, self.process_id
         records = []
         for w, dev in self._devices.items():
             owned = sorted(
@@ -252,27 +320,72 @@ class DeviceFleet:
             records.append(DeviceRecord(
                 worker=w, backend=dev.backend, custody=tuple(owned),
                 n_samples=sum(self._shards[s].n_samples for s in owned),
+                process=pid if pmap else 0,
+            ))
+        for w, proc in sorted(self._remote.items()):
+            records.append(DeviceRecord(
+                worker=w, backend="remote", custody=(), n_samples=0,
+                process=proc,
             ))
         return FleetManifest(
             assignments=core.assignments,
             devices=tuple(records),
             backend=self.spec.backend,
             quarantined=tuple(sorted(self.quarantined)),
+            n_processes=pmap.n_processes if pmap else 1,
+            local_process=pid,
         )
 
-    def adopt_plan(self, plan) -> None:
+    def adopt_plan(self, plan, local_plan=None) -> None:
         """Hand a session's :class:`~repro.api.artifacts.ShardingPlan` to the
         data plane: the meshfeed backend lands every batch key with the
         plan's ``NamedSharding`` (the exact layout the compiled step declares
-        as ``in_shardings``).  Host-delivery backends ignore it — their
-        arrays are resharded by jit against the plan's 1x1 mesh."""
+        as ``in_shardings``).  ``local_plan`` is the hostsync compute plan of
+        a cluster worker — when given, every feed also assembles the local
+        view over the same device buffers.  Host-delivery backends ignore
+        both — their arrays are resharded by jit against the plan's 1x1
+        mesh."""
         if self._feeder is not None:
-            self._feeder.adopt_shardings(plan.batch)
+            self._feeder.adopt_shardings(
+                plan.batch,
+                local=None if local_plan is None else local_plan.batch,
+                global_rows=plan.global_rows,
+            )
 
-    def to_device_batch(self, batch: Dict[str, np.ndarray]) -> Dict:
-        """Land host arrays on the accelerator, backend-appropriately."""
+    @property
+    def last_receipt(self):
+        """The :class:`~repro.storage.meshfeed.FeedReceipt` of the most
+        recent feed (None before the first, or for host-delivery backends)."""
+        return self._feeder.last_receipt if self._feeder is not None else None
+
+    def to_device_batch(
+        self,
+        batch: Dict[str, np.ndarray],
+        *,
+        row_span: Optional[Tuple[int, int]] = None,
+    ) -> Dict:
+        """Land host arrays on the accelerator, backend-appropriately.
+
+        ``row_span`` is this process's [start, stop) window of the global
+        batch (cluster mode): only those rows are sliced out and fed through
+        :meth:`MeshFeeder.feed_addressable` — the rest of ``batch`` is never
+        transferred.  When a local (hostsync) plan was adopted the LOCAL
+        view is returned — the compute arrays the partial-gradient step
+        consumes, assembled over the same buffers as the global contract.
+        """
         if self._feeder is not None:
-            return self._feeder.feed(batch)
+            if row_span is not None:
+                start, stop = row_span
+                rows = next(iter(batch.values())).shape[0]
+                local = {k: v[start:stop] for k, v in batch.items()}
+                out = self._feeder.feed_addressable(
+                    local, row_offset=start, global_rows=rows,
+                )
+            else:
+                out = self._feeder.feed(batch)
+            if self._feeder.last_local:
+                return self._feeder.last_local
+            return out
         import jax.numpy as jnp
 
         return {k: jnp.asarray(v) for k, v in batch.items()}
@@ -340,6 +453,17 @@ class FleetBatcher:
             if w in self._cursor and self._space[w]:
                 self._cursor[w] = c % len(self._space[w])
 
+    def cursors(self) -> Dict[str, int]:
+        """Per-worker epoch positions (checkpoint metadata: a restore must
+        resume the SAMPLING state too, or it replays already-seen data)."""
+        return dict(self._cursor)
+
+    def set_cursors(self, cursors: Dict[str, int]) -> None:
+        """Fast-forward epoch positions (from checkpoint metadata)."""
+        for w, c in cursors.items():
+            if w in self._cursor and self._space[w]:
+                self._cursor[w] = int(c) % len(self._space[w])
+
     def steps_per_epoch(self) -> int:
         counts = [
             len(self._space[w]) // max(1, b)
@@ -352,7 +476,20 @@ class FleetBatcher:
         while True:
             yield self.next_batch()
 
+    def local_row_span(self) -> Optional[Tuple[int, int]]:
+        """This process's [start, stop) rows of the global batch, or None
+        single-process (the whole batch is local)."""
+        pmap = self.fleet.process_map
+        if pmap is None:
+            return None
+        return pmap.row_span(self.fleet.process_id, self.schedule.max_local)
+
     def next_batch(self) -> Dict[str, np.ndarray]:
+        """One global-layout host batch; only LOCAL groups' rows are
+        assembled (each by its own storage device).  Remote groups' rows
+        stay zero — their bytes live in another process and never enter
+        this one; every cursor still advances, so all processes agree on
+        the epoch position of every group."""
         R = self.schedule.global_rows
         S = self.cfg.seq_len
         ml = self.schedule.max_local
@@ -363,12 +500,14 @@ class FleetBatcher:
         ):
             space = self._space[w]
             cur = self._cursor[w]
+            self._cursor[w] = (cur + b) % max(1, len(space))
+            if not self.fleet.is_local(w):
+                continue
             draws = [
                 space[(cur + r) % max(1, len(space))] for r in range(b)
             ]
             if draws:
                 tokens[g * ml:g * ml + b] = self.fleet.device(w).assemble(draws)
-            self._cursor[w] = (cur + b) % max(1, len(space))
         return {
             "tokens": tokens[:, :-1],
             "labels": tokens[:, 1:],
@@ -378,10 +517,12 @@ class FleetBatcher:
 
     def next_device_batch(self) -> Dict:
         """One step's batch, already landed where the step function wants it
-        (mesh-sharded for the meshfeed backend, plain device arrays else)."""
+        (mesh-sharded for the meshfeed backend, plain device arrays else;
+        per-host addressable slices only, in a cluster)."""
         b = self.next_batch()
         return self.fleet.to_device_batch(
-            {k: b[k] for k in ("tokens", "labels", "loss_mask")}
+            {k: b[k] for k in ("tokens", "labels", "loss_mask")},
+            row_span=self.local_row_span(),
         )
 
 

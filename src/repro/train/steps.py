@@ -114,6 +114,96 @@ def make_train_step(
     return train_step
 
 
+def make_partial_grad_step(
+    model: Model,
+    *,
+    aux_weight: float = 0.01,
+) -> Callable:
+    """The per-host half of cluster (hostsync) training.
+
+    Returns ``grad_step(params, batch) -> (grads, sums)`` computing this
+    host's UNNORMALIZED contribution to the global objective over its local
+    rows only:
+
+        F_p(params) = Σ_p mask·ce  +  aux_weight · den_p · aux_p
+        sums        = {num: Σ mask·ce, den: Σ mask, auxden: den_p · aux_p}
+
+    The global masked-mean step is ``total = (Σ_p F_p) / max(Σ_p den_p, 1)``
+    — a ratio of ACROSS-host sums — so summing each host's ``grads`` and
+    ``sums`` and applying :func:`make_apply_step` reproduces the
+    single-program :func:`make_train_step` exactly (dense models; an MoE
+    router aux becomes its den-weighted mean, which coincides for P=1).
+    This is how a backend that cannot run cross-process XLA programs
+    (CPU jaxlib — see :func:`repro.compat.multiprocess_compute_supported`)
+    still trains one exact global model: partial gradients meet at the
+    coordinator, the paper's host-aggregation topology.
+    """
+
+    def objective(params, batch):
+        kwargs = {
+            k: batch[k] for k in ("frames", "patch_embeds") if k in batch
+        }
+        logits, aux = model.forward(params, batch["tokens"], **kwargs)
+        labels = batch["labels"]
+        mask = batch["loss_mask"]
+        if logits.shape[1] != labels.shape[1]:
+            logits = logits[:, -labels.shape[1]:]
+        ce = cross_entropy(logits, labels)
+        num = jnp.sum(ce * mask)
+        den = jnp.sum(mask)
+        auxden = den * aux
+        return num + aux_weight * auxden, {
+            "num": num, "den": den, "auxden": auxden,
+        }
+
+    def grad_step(params, batch):
+        (_, sums), grads = jax.value_and_grad(
+            objective, has_aux=True
+        )(params, batch)
+        return grads, sums
+
+    return grad_step
+
+
+def make_apply_step(
+    optimizer: Optimizer,
+    lr_schedule: Callable[[jax.Array], jax.Array],
+    *,
+    aux_weight: float = 0.01,
+) -> Callable:
+    """The update half of cluster (hostsync) training.
+
+    ``apply_step(params, opt_state, grads, sums) -> (params, opt_state,
+    metrics)`` consumes the ACROSS-host sums of :func:`make_partial_grad_step`
+    outputs.  Every host applies the identical update to its identical
+    params — replicas stay bit-synchronized without a broadcast, and the
+    metrics match :func:`make_train_step`'s.
+    """
+
+    def apply_step(params, opt_state: OptState, grads, sums):
+        den = jnp.maximum(sums["den"], 1.0)
+        loss = sums["num"] / den
+        aux = sums["auxden"] / den
+        grads = jax.tree_util.tree_map(lambda g: g / den, grads)
+        lr = lr_schedule(opt_state.step)
+        opt_state, params = optimizer.update(grads, opt_state, params, lr)
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree_util.tree_leaves(grads))
+        )
+        metrics = {
+            "loss": loss,
+            "aux": aux,
+            "total": loss + aux_weight * aux,
+            "lr": lr,
+            "grad_norm": gnorm,
+            "tokens": sums["den"],
+        }
+        return params, opt_state, metrics
+
+    return apply_step
+
+
 def make_eval_step(model: Model, *, aux_weight: float = 0.01) -> Callable:
     def eval_step(params, batch):
         _, parts = loss_fn(model, params, batch, aux_weight=aux_weight)

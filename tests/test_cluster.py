@@ -1,0 +1,266 @@
+"""Multi-process cluster execution: process custody, per-host addressable
+feeding, membership-driven elasticity, and the 2-process kill/rejoin path.
+
+The expensive end-to-end case (`test_elastic_kill_replan_restore_rejoin`)
+launches a REAL 2-process x 4-fake-device cluster, hard-kills one worker
+mid-run, and drives the observed death through membership -> ``WorkerLost``
+-> ``session.apply`` replanning -> checkpoint restore onto the smaller
+mesh, then grows it back with a join.  The full invariant smoke
+(addressable-only placement, single-process loss parity) lives in
+``benchmarks/cluster_smoke.py``, which CI runs as a separate gate.
+"""
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    DirMembershipSource, ElasticController, FleetSpec, MemberInfo,
+    MembershipWatcher, WorkerJoined, WorkerLost,
+)
+from repro.api.membership import HeartbeatWriter, write_heartbeat
+from repro.core.topology import ClusterSpec, ProcessMap
+
+SEQ_LEN = 16
+
+
+# ---------------------------------------------------------------------------
+# process custody (pure accounting)
+# ---------------------------------------------------------------------------
+
+
+def test_process_map_splits_groups_contiguously():
+    pm = ProcessMap(("host/0", "csd/0", "csd/1", "csd/2"), 2)
+    assert [pm.process_of_group(g) for g in range(4)] == [0, 0, 1, 1]
+    assert pm.local_workers(0) == ("host/0", "csd/0")
+    assert pm.local_workers(1) == ("csd/1", "csd/2")
+    # rows are group-major: each process owns one contiguous slab
+    assert pm.row_span(0, 5) == (0, 10)
+    assert pm.row_span(1, 5) == (10, 20)
+    assert pm.process_of("csd/2") == 1
+
+
+def test_process_map_rejects_empty_processes():
+    with pytest.raises(ValueError, match="dp-group"):
+        ProcessMap(("a", "b"), 3)       # a worker process with nothing to do
+    with pytest.raises(ValueError):
+        ProcessMap(("a",), 0)
+
+
+def test_cluster_data_axis_never_straddles_processes():
+    from repro.launch.mesh import cluster_data_axis
+
+    # must divide rows AND be a multiple of the process count
+    assert cluster_data_axis(40, 8, 2) == 8
+    assert cluster_data_axis(12, 8, 2) == 6
+    assert cluster_data_axis(6, 8, 4) == 4     # fallback: 1 chunk/process
+    assert cluster_data_axis(8, 3, 2) == 2
+
+
+def test_cluster_mesh_takes_equal_share_per_process():
+    """When the data axis is SMALLER than the global device count, the mesh
+    must still draw data/P devices from EACH process — taking the first
+    ``data`` process-major would spill process 0's chunks past its custody
+    row slab (regression: global_rows=12 on 2x4 devices -> data axis 6)."""
+    import collections
+
+    from repro.launch.mesh import pick_cluster_devices
+
+    Dev = collections.namedtuple("Dev", "process_index id")
+    devs = [Dev(p, p * 131072 + i) for p in range(2) for i in range(4)]
+    picked = pick_cluster_devices(devs, data=6, model=1, n_processes=2)
+    assert [d.process_index for d in picked] == [0, 0, 0, 1, 1, 1]
+    with pytest.raises(ValueError, match="does not split"):
+        pick_cluster_devices(devs, data=5, model=1, n_processes=2)
+    with pytest.raises(ValueError, match="needs 4 from each"):
+        pick_cluster_devices(devs[:7], data=8, model=1, n_processes=2)
+
+
+def test_with_cluster_upgrades_default_storage():
+    spec = FleetSpec.demo(3).with_cluster(processes=2, local_devices=4)
+    assert spec.cluster == ClusterSpec(processes=2, local_devices=4)
+    assert spec.storage.backend == "meshfeed"       # synthetic auto-upgrades
+    flash = FleetSpec.demo(3).with_storage("flash").with_cluster(processes=2)
+    assert flash.storage.backend == "flash"         # explicit choice kept
+
+
+# ---------------------------------------------------------------------------
+# per-host feeding (single-process degenerate case: everything addressable)
+# ---------------------------------------------------------------------------
+
+
+def test_feed_receipt_accounts_every_byte():
+    from repro.launch.cluster import demo_session_factory
+
+    s = demo_session_factory(processes=1, steps=2, seq_len=SEQ_LEN)
+    s.shard()
+    batch = s.dataset.next_device_batch()
+    receipt = s.devices.last_receipt
+    assert receipt is not None
+    R = s.tune().schedule.global_rows
+    assert receipt.rows_local == receipt.rows_global == R
+    assert receipt.local_fraction == 1.0
+    # tokens i32 + labels i32 + loss_mask f32, every row put exactly once
+    assert receipt.bytes_put == R * SEQ_LEN * 12
+    import jax
+
+    local = {d.id for d in jax.local_devices()}
+    assert set(receipt.devices) <= local
+    assert batch["tokens"].shape == (R, SEQ_LEN)
+
+
+def test_feed_addressable_rejects_rows_outside_custody():
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.storage.meshfeed import MeshFeeder
+
+    feeder = MeshFeeder()
+    mesh = None
+    from repro.launch.mesh import make_single_mesh
+
+    mesh = make_single_mesh()
+    sh = NamedSharding(mesh, P("data", None))
+    feeder.adopt_shardings({"tokens": sh}, global_rows=8)
+    # this host claims rows [4, 8) but the (1-device) mesh needs [0, 8)
+    with pytest.raises(ValueError, match="outside this host's rows"):
+        feeder.feed_addressable(
+            {"tokens": np.zeros((4, 4), np.int32)},
+            row_offset=4, global_rows=8,
+        )
+
+
+# ---------------------------------------------------------------------------
+# membership -> events -> session.apply (scripted source: deterministic)
+# ---------------------------------------------------------------------------
+
+
+class ScriptedSource:
+    def __init__(self, live):
+        self.live = dict(live)
+
+    def poll(self):
+        return dict(self.live)
+
+
+def _controller_session(n_csds=3, steps=2):
+    from repro.launch.cluster import demo_session_factory
+
+    return demo_session_factory(
+        processes=1, n_csds=n_csds, steps=steps, seq_len=SEQ_LEN
+    )
+
+
+def test_membership_watcher_emits_lost_and_joined():
+    m0 = MemberInfo("proc-0", ("host/0", "csd/0"))
+    m1 = MemberInfo("proc-1", ("csd/1", "csd/2"))
+    src = ScriptedSource({"proc-0": m0, "proc-1": m1})
+    w = MembershipWatcher(src)
+    assert w.events() == []                       # first poll = baseline
+    del src.live["proc-1"]
+    assert w.events() == [WorkerLost(("csd/1", "csd/2"))]
+    src.live["proc-2"] = MemberInfo("proc-2", ("csd/7", "csd/8"))
+    assert w.events() == [WorkerJoined("csd", 2)]
+
+
+def test_elastic_controller_replans_session():
+    s = _controller_session()
+    n0 = s.tune().schedule.n_groups
+    m0 = MemberInfo("proc-0", ("host/0", "csd/0"))
+    m1 = MemberInfo("proc-1", ("csd/1", "csd/2"))
+    src = ScriptedSource({"proc-0": m0, "proc-1": m1})
+    controller = ElasticController(s, MembershipWatcher(src))
+    assert controller.step() == []
+    del src.live["proc-1"]
+    results = controller.step()
+    assert len(results) == 1
+    assert s.tune().schedule.n_groups == n0 - 2
+    src.live["proc-2"] = MemberInfo("proc-2", ("csd/9",))
+    controller.step()
+    assert s.tune().schedule.n_groups == n0 - 1   # grew back by one
+
+
+def test_dir_membership_source_roundtrip(tmp_path):
+    d = str(tmp_path)
+    src = DirMembershipSource(d, stale_after=5.0)
+    hb = HeartbeatWriter(d, "proc-0", ("csd/0",), interval=0.1).start()
+    try:
+        live = MembershipWatcher(src).wait_for(1, timeout=10)
+        assert live["proc-0"].workers == ("csd/0",)
+    finally:
+        hb.stop(deregister=True)
+    assert src.poll() == {}                       # clean leave = gone
+
+
+# ---------------------------------------------------------------------------
+# the 2-process elastic path, end to end
+# ---------------------------------------------------------------------------
+
+
+def test_elastic_kill_replan_restore_rejoin(tmp_path):
+    """Kill one worker process of a live 2-process cluster: the membership
+    watcher turns the death into ``WorkerLost``, ``session.apply`` replans
+    onto the smaller mesh, the (2-process, single-writer) checkpoint
+    restores straight onto it, and a subsequent join grows it back."""
+    from repro.checkpoint.manager import latest_step
+    from repro.launch.cluster import ClusterCoordinator
+
+    ckpt = str(tmp_path / "ckpt")
+    coord = ClusterCoordinator(
+        ClusterSpec(processes=2, local_devices=4),
+        "repro.launch.cluster:demo_session_factory",
+        {"processes": 2, "steps": 60, "seq_len": SEQ_LEN,
+         "checkpoint_dir": ckpt, "checkpoint_every": 2},
+        run_dir=str(tmp_path / "run"),
+    )
+    coord.launch(resume_steps=0)
+    try:
+        watcher = MembershipWatcher(
+            DirMembershipSource(coord.membership_dir, stale_after=1.5)
+        )
+        live = watcher.wait_for(2, timeout=240)
+        lost_workers = set(live["proc-1"].workers)
+        assert len(lost_workers) == 2             # 4 groups, 2 per process
+
+        deadline = time.time() + 240
+        while latest_step(ckpt) is None:          # a coordinated save landed
+            assert time.time() < deadline, "no checkpoint appeared"
+            time.sleep(0.5)
+
+        coord.kill_worker(1)                      # SIGKILL: no goodbye
+        # the survivor dies at its poisoned allreduce; wait both out so no
+        # save can race the restore below
+        for proc in coord.processes:
+            proc.wait(timeout=120)
+
+        # observed death -> WorkerLost for exactly the killed process
+        event = None
+        deadline = time.time() + 60
+        while event is None and time.time() < deadline:
+            for ev in watcher.events():
+                if isinstance(ev, WorkerLost) and set(ev.workers) == lost_workers:
+                    event = ev
+            time.sleep(0.2)
+        assert event is not None, "membership never reported the kill"
+
+        # controller session (full fleet view): replan -> restore -> train
+        s = _controller_session(steps=60)
+        s.config.checkpoint_dir = ckpt
+        assert s.tune().schedule.n_groups == 4
+        result = s.apply(event)
+        assert s.tune().schedule.n_groups == 2
+        assert all(w not in s.tune().group_workers for w in lost_workers)
+        saved = latest_step(ckpt)
+        rep = s.run(steps=saved + 2)              # restores onto the RESIZED plan
+        assert rep.start_step == saved and rep.steps_run == 2
+        assert np.isfinite(rep.final_loss)
+
+        # a replacement joins: the mesh grows back and the same checkpoint
+        # restores onto the larger plan too
+        s.apply(WorkerJoined("csd", 1))
+        assert s.tune().schedule.n_groups == 3
+        rep2 = s.run(steps=latest_step(ckpt) + 1)
+        assert np.isfinite(rep2.final_loss)
+    finally:
+        coord.close()

@@ -274,8 +274,12 @@ def test_use_rules_installs_and_restores():
 
 def test_constraint_mismatch_warns_once():
     from repro.compat import set_mesh
+    from repro.distributed.sharding import reset_constraint_warnings
     from repro.launch.mesh import make_single_mesh
 
+    # the cache is process-global: clear it so the ONE warning asserted
+    # below is observed regardless of which test tripped this key earlier
+    reset_constraint_warnings()
     mesh = make_single_mesh()
     x = jnp.zeros((4,))
     with set_mesh(mesh):

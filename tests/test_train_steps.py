@@ -1,8 +1,9 @@
-"""Integration: the full Stannis pipeline (tune -> plan -> place -> train),
-fault tolerance (restart, node loss), and the data-plane invariants.  (This
-file kept its name through the Trainer -> Session migration so the tier-1
-history lines up; the ``Trainer`` stub and the ``repro.data`` compat shim
-are deleted now that every caller is on ``Session`` + ``repro.storage``.)"""
+"""Integration: training steps end-to-end through the Session pipeline
+(tune -> plan -> place -> train), fault tolerance (restart, node loss), the
+data-plane invariants, and the partial-gradient (cluster hostsync) step's
+equivalence to the single-program step.  (Formerly ``test_trainer.py`` —
+the ``Trainer`` it was named for died in PR 3; the surviving cases live on
+here under the name of what they actually test.)"""
 import os
 
 import jax
@@ -122,6 +123,70 @@ def test_dataset_layout_and_masks():
     # invalid rows carry zero tokens (never sampled)
     dead = b["tokens"][b["loss_mask"][:, 0] == 0]
     assert (dead == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# the cluster (hostsync) split step == the single-program step
+# ---------------------------------------------------------------------------
+
+
+def test_partial_grad_step_matches_train_step():
+    """Summing per-host partial gradients and applying once must reproduce
+    the fused masked-global-mean step exactly — the numerical contract the
+    multi-process hostsync path stands on."""
+    from repro.train.steps import (
+        make_apply_step, make_partial_grad_step, make_train_step,
+    )
+
+    cfg = smoke_config("deepseek-7b")
+    model = get_model(cfg)
+    opt = adamw()
+    params, _ = model.init_params(key=jax.random.PRNGKey(0))
+    opt_state = opt.init(params)
+    sched = lambda s: 1e-3  # noqa: E731
+
+    rng = np.random.default_rng(0)
+    R, S = 8, 8
+    batch = {
+        "tokens": rng.integers(0, cfg.vocab, (R, S)).astype(np.int32),
+        "labels": rng.integers(0, cfg.vocab, (R, S)).astype(np.int32),
+        # heterogeneous validity: one dead row per half
+        "loss_mask": np.ones((R, S), np.float32),
+    }
+    batch["loss_mask"][3] = 0.0
+    batch["loss_mask"][6] = 0.0
+
+    fused = make_train_step(model, opt, sched)
+    p_ref, o_ref, m_ref = fused(params, opt_state, batch)
+
+    grad_step = make_partial_grad_step(model)
+    apply_step = make_apply_step(opt, sched)
+    halves = [
+        {k: v[:4] for k, v in batch.items()},
+        {k: v[4:] for k, v in batch.items()},
+    ]
+    grads, sums = None, None
+    for h in halves:                       # the coordinator's tree-sum
+        g, s = grad_step(params, h)
+        if grads is None:
+            grads, sums = g, s
+        else:
+            grads = jax.tree_util.tree_map(jnp.add, grads, g)
+            sums = jax.tree_util.tree_map(jnp.add, sums, s)
+    p_new, o_new, m_new = apply_step(params, opt_state, grads, sums)
+
+    np.testing.assert_allclose(
+        float(m_new["loss"]), float(m_ref["loss"]), rtol=1e-6
+    )
+    np.testing.assert_allclose(
+        float(m_new["grad_norm"]), float(m_ref["grad_norm"]), rtol=1e-5
+    )
+    for a, b in zip(jax.tree_util.tree_leaves(p_new),
+                    jax.tree_util.tree_leaves(p_ref)):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=2e-5, atol=1e-7
+        )
+    assert int(o_new.step) == int(o_ref.step) == 1
 
 
 # ---------------------------------------------------------------------------
