@@ -35,8 +35,18 @@ echo "[ci]   single-process loss curve (each worker sets its own"
 echo "[ci]   XLA_FLAGS=--xla_force_host_platform_device_count=4)"
 PYTHONPATH=src python benchmarks/cluster_smoke.py
 
+echo "[ci] serve smoke (continuous batching): asserts a request admitted"
+echo "[ci]   mid-decode streams before the first finishes with unchanged"
+echo "[ci]   outputs, prefix-cache hits are bit-identical to cold prefill,"
+echo "[ci]   and per-request events stream in order (dense + rwkv6)"
+PYTHONPATH=src python benchmarks/serve_smoke.py
+
 echo "[ci] step benchmark (8-device CPU mesh + 2-process cluster record)"
 echo "[ci]   -> BENCH_step.json"
 PYTHONPATH=src python benchmarks/bench_step.py --steps 4
+
+echo "[ci] serve benchmark (CI-sized load; the committed BENCH_serve.json"
+echo "[ci]   is the 256-request run) -> BENCH_serve.json"
+PYTHONPATH=src python benchmarks/bench_serve.py --requests 24
 
 echo "[ci] OK"

@@ -29,6 +29,7 @@ from repro.api.membership import (
 from repro.api.serving import GenerateResult, ServeSession
 from repro.api.session import Session, SessionConfig
 from repro.core.topology import ClusterSpec, ProcessMap
+from repro.serve import EngineConfig, SamplingParams, ServeEngine
 from repro.storage import DeviceFleet, FleetManifest, StorageSpec
 
 __all__ = [
@@ -39,6 +40,7 @@ __all__ = [
     "DirMembershipSource",
     "DriftDetected",
     "ElasticController",
+    "EngineConfig",
     "FleetEvent",
     "FleetManifest",
     "FleetSpec",
@@ -48,6 +50,8 @@ __all__ = [
     "MembershipWatcher",
     "ProcessMap",
     "ReplanResult",
+    "SamplingParams",
+    "ServeEngine",
     "ServeSession",
     "Session",
     "SessionConfig",

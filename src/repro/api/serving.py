@@ -1,23 +1,35 @@
 """`ServeSession`: the inference-side counterpart of :class:`~repro.api.Session`.
 
 Wraps prefill + KV-cache decode behind one object so serving drivers stop
-hand-rolling the per-family control flow (recurrent archs feed the prompt
-token-by-token with O(1) state; attention archs run a batched prefill).
+hand-rolling the per-family control flow (recurrent archs prefill with one
+compiled ``lax.scan`` over the prompt; attention archs run a batched prefill).
+The decode step donates its cache argument, so the loop never copies the
+KV/state buffers.
 
     serve = ServeSession(model=model, params=params)
     out = serve.generate(prompt_tokens, max_new_tokens=16)
     print(out.tokens, out.decode_tok_s)
+
+One-shot ``generate`` is deliberately self-contained — it is the independent
+oracle the engine-parity tests compare against.  For queued / continuously
+batched serving, ``engine()`` and ``generate_many()`` hand off to
+:class:`repro.serve.ServeEngine`.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Optional
+from typing import Any, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.models.api import Model
+from repro.serve.engine import EngineConfig, GenOutput, ServeEngine
+from repro.serve.runner import StepRunner
+from repro.serve.sampling import (
+    GREEDY, SamplingParams, make_sample_fn, request_key,
+)
 from repro.train.steps import make_serve_step
 
 PyTree = Any
@@ -37,23 +49,35 @@ class ServeSession:
     def __init__(self, *, model: Model, params: PyTree):
         self.model = model
         self.params = params
-        self._serve = jax.jit(make_serve_step(model))
+        raw = make_serve_step(model)
+        self._serve = jax.jit(raw, donate_argnums=(2,))
+        self._sample = make_sample_fn()
+        self._sample_jit = jax.jit(self._sample)
+
+        def sampled_step(p, tok, cache, pos, roots, temp, topk, tidx):
+            _, logits, cache = raw(p, tok, cache, pos)
+            keys = jax.vmap(jax.random.fold_in, (0, None))(roots, tidx)
+            nxt = self._sample(logits[:, -1], keys, temp, topk)
+            return nxt[:, None], cache
+
+        self._serve_sampled = jax.jit(sampled_step, donate_argnums=(2,))
         self._prefill = None     # (cache_len, jitted fn), built lazily
+        self._runner: Optional[StepRunner] = None
 
     @property
     def recurrent(self) -> bool:
         return self.model.cfg.family in ("rglru", "rwkv6")
 
     def _prefill_recurrent(self, prompt: jax.Array, cache_len: int):
-        B, P = prompt.shape
+        """One compiled ``lax.scan`` over the prompt (was a per-token Python
+        loop with O(prompt_len) host round-trips)."""
+        if self._runner is None:
+            self._runner = StepRunner(self.model)
+        B = prompt.shape[0]
         cache = self.model.init_cache(B, cache_len)
-        nxt = prompt[:, 0:1]
-        for t in range(P):
-            pos = jnp.full((B,), t, jnp.int32)
-            nxt, _, cache = self._serve(
-                self.params, prompt[:, t:t + 1], cache, pos
-            )
-        return nxt, cache
+        start = jnp.zeros((B,), jnp.int32)
+        logits, cache = self._runner.extend(self.params, prompt, cache, start)
+        return logits, cache
 
     def _prefill_attention(self, prompt: jax.Array, cache_len: int):
         if self._prefill is None or self._prefill[0] != cache_len:
@@ -61,8 +85,7 @@ class ServeSession:
                 lambda p, t: self.model.prefill(p, t, cache_len)
             ))
         logits, cache = self._prefill[1](self.params, prompt)
-        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-        return tok, cache
+        return logits[:, -1], cache
 
     def generate(
         self,
@@ -70,19 +93,38 @@ class ServeSession:
         *,
         max_new_tokens: int = 16,
         cache_len: Optional[int] = None,
+        sampling: SamplingParams = GREEDY,
     ) -> GenerateResult:
         B, P = prompt.shape
         cache_len = cache_len or (P + max_new_tokens + 1)
         if self.recurrent:
-            tok, cache = self._prefill_recurrent(prompt, cache_len)
+            logits, cache = self._prefill_recurrent(prompt, cache_len)
         else:
-            tok, cache = self._prefill_attention(prompt, cache_len)
+            logits, cache = self._prefill_attention(prompt, cache_len)
+
+        greedy = sampling.temperature <= 0.0
+        if greedy:
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+            roots = temp = topk = None
+        else:
+            # row i samples from request stream i: batched generate draws the
+            # same chains as submitting the rows to the engine one by one
+            roots = jnp.stack([request_key(sampling, i) for i in range(B)])
+            temp = jnp.full((B,), sampling.temperature, jnp.float32)
+            topk = jnp.full((B,), sampling.top_k, jnp.int32)
+            keys0 = jax.vmap(jax.random.fold_in, (0, None))(roots, 0)
+            tok = self._sample_jit(logits, keys0, temp, topk)[:, None]
 
         out = [tok]
         t0 = time.time()
         for t in range(max_new_tokens):
             pos = jnp.full((B,), P + t, jnp.int32)
-            tok, _, cache = self._serve(self.params, tok, cache, pos)
+            if greedy:
+                tok, _, cache = self._serve(self.params, tok, cache, pos)
+            else:
+                tok, cache = self._serve_sampled(
+                    self.params, tok, cache, pos, roots, temp, topk, t + 1
+                )
             out.append(tok)
         jax.block_until_ready(tok)
         dt = max(time.time() - t0, 1e-9)
@@ -91,4 +133,32 @@ class ServeSession:
             decode_time=dt,
             decode_tok_s=max_new_tokens * B / dt,
             ms_per_step=dt / max(1, max_new_tokens) * 1e3,
+        )
+
+    # -- continuous batching (delegates to repro.serve) -----------------------
+
+    def engine(self, config: Optional[EngineConfig] = None) -> ServeEngine:
+        """A :class:`ServeEngine` over this session's model + params."""
+        return ServeEngine(model=self.model, params=self.params,
+                           config=config or EngineConfig())
+
+    def generate_many(
+        self,
+        prompts: Sequence[Sequence[int]],
+        *,
+        max_new_tokens: int = 16,
+        sampling: SamplingParams = GREEDY,
+        config: Optional[EngineConfig] = None,
+    ) -> List[GenOutput]:
+        """Queue many variable-length prompts through the engine."""
+        if config is None:
+            need = max(len(p) for p in prompts) + max_new_tokens
+            base = EngineConfig()
+            config = dataclasses.replace(
+                base, max_len=max(base.max_len, need),
+                max_slots=min(base.max_slots, len(prompts)),
+            )
+        eng = self.engine(config)
+        return eng.generate_batch(
+            prompts, max_new_tokens=max_new_tokens, sampling=sampling
         )

@@ -75,6 +75,127 @@ def _decode_kernel(
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
+def _paged_decode_kernel(
+    table_ref,                  # scalar-prefetch: (B, NP) int32 block table
+    valid_ref, q_ref, k_ref, v_ref, o_ref,
+    m_ref, l_ref, acc_ref,
+    *,
+    scale: float,
+    window: Optional[int],
+    page_size: int,
+    n_pages: int,
+):
+    """Online-softmax decode over pool-resident KV pages.
+
+    Identical math to :func:`_decode_kernel`, but the KV chunk for grid step
+    (b, h, j) is DMA'd straight from page ``table[b, j]`` of the shared pool —
+    the block table is scalar-prefetched so the index map can address pages
+    before the body runs.  Shared prefix pages are fetched per-sequence but
+    stored once (ref-counted by the serve-side BlockAllocator)."""
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    valid = valid_ref[0, 0]
+    first_k = j * page_size
+    live = first_k < valid
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale         # (1, D)
+        k = k_ref[0, :, 0].astype(jnp.float32)              # (page, D)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )                                                   # (1, page)
+        k_pos = first_k + jax.lax.broadcasted_iota(jnp.int32, (1, page_size), 1)
+        mask = k_pos < valid
+        if window is not None:
+            mask &= k_pos > (valid - 1 - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(j == n_pages - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def paged_decode_attention(
+    q: jax.Array,               # (B, 1, H, D)
+    k_pages: jax.Array,         # (P, page_size, Hkv, D)  shared page pool
+    v_pages: jax.Array,
+    block_table: jax.Array,     # (B, NP) int32 page ids per sequence
+    valid_len: jax.Array,       # (B,) int32 valid positions per sequence
+    *,
+    window: Optional[int] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Decode attention driven by a block table over a paged KV pool.
+
+    The block-table counterpart of :func:`decode_attention`: instead of a
+    per-sequence contiguous cache, KV lives once in a ref-counted page pool
+    and each sequence brings a table of page ids — the serving engine's
+    paged-gather hot path (prefix blocks shared between sequences are read
+    in place, never materialized per sequence)."""
+    B, _, H, D = q.shape
+    n_pool, page_size, Hkv = k_pages.shape[0], k_pages.shape[1], k_pages.shape[2]
+    NP = block_table.shape[1]
+    assert H % Hkv == 0
+    group = H // Hkv
+
+    qt = jnp.moveaxis(q, 2, 1)                              # (B, H, 1, D)
+    valid2 = valid_len.astype(jnp.int32).reshape(B, 1)
+    table = block_table.astype(jnp.int32)
+
+    kernel = functools.partial(
+        _paged_decode_kernel,
+        scale=1.0 / math.sqrt(D), window=window,
+        page_size=page_size, n_pages=NP,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, H, NP),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, j, tbl: (b, 0)),
+            pl.BlockSpec((1, 1, 1, D), lambda b, h, j, tbl: (b, h, 0, 0)),
+            pl.BlockSpec(
+                (1, page_size, 1, D),
+                lambda b, h, j, tbl, g=group: (tbl[b, j], 0, h // g, 0),
+            ),
+            pl.BlockSpec(
+                (1, page_size, 1, D),
+                lambda b, h, j, tbl, g=group: (tbl[b, j], 0, h // g, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, D), lambda b, h, j, tbl: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(qt.shape, q.dtype),
+        interpret=interpret,
+    )(table, valid2, qt, k_pages, v_pages)
+    return jnp.moveaxis(out, 1, 2)                          # (B, 1, H, D)
+
+
 def decode_attention(
     q: jax.Array,               # (B, 1, H, D)
     k: jax.Array,               # (B, Skv, Hkv, D)  cache

@@ -17,6 +17,9 @@ import jax.numpy as jnp
 
 from repro.kernels import ref as R
 from repro.kernels.decode_attention import decode_attention as _decode_pallas
+from repro.kernels.decode_attention import (
+    paged_decode_attention as _paged_decode_pallas,
+)
 from repro.kernels.flash_attention import flash_attention_fwd as _flash_pallas
 from repro.kernels.quantize import dequantize_int8 as _deq
 from repro.kernels.quantize import quantize_int8 as _quant_pallas
@@ -88,6 +91,24 @@ def decode_attention(
         return R.decode_attention_ref(q, k, v, valid_len, window=window)
     return _decode_pallas(
         q, k, v, valid_len, window=window, block_k=block_k, interpret=interpret
+    )
+
+
+def paged_decode_attention(
+    q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+    block_table: jax.Array, valid_len: jax.Array,
+    *,
+    window: Optional[int] = None,
+    interpret: bool = False,
+    use_kernel: bool = True,
+) -> jax.Array:
+    if not use_kernel:
+        return R.paged_decode_attention_ref(
+            q, k_pages, v_pages, block_table, valid_len, window=window
+        )
+    return _paged_decode_pallas(
+        q, k_pages, v_pages, block_table, valid_len,
+        window=window, interpret=interpret,
     )
 
 

@@ -77,6 +77,23 @@ def decode_attention_ref(
     return jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32)).astype(q.dtype)
 
 
+def paged_decode_attention_ref(
+    q: jax.Array,               # (B, 1, H, D)
+    k_pages: jax.Array,         # (P, page_size, Hkv, D)
+    v_pages: jax.Array,
+    block_table: jax.Array,     # (B, NP) int32
+    valid_len: jax.Array,       # (B,) int32
+    *,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """Gather each row's pages into a contiguous cache, then dense decode."""
+    B, NP = block_table.shape
+    page_size, Hkv, D = k_pages.shape[1:]
+    k = k_pages[block_table].reshape(B, NP * page_size, Hkv, D)
+    v = v_pages[block_table].reshape(B, NP * page_size, Hkv, D)
+    return decode_attention_ref(q, k, v, valid_len, window=window)
+
+
 # ---------------------------------------------------------------------------
 # Linear recurrences
 # ---------------------------------------------------------------------------

@@ -1,0 +1,55 @@
+"""`repro.serve` — the continuous-batching serving engine.
+
+The inference-side counterpart of :class:`repro.api.Session`:
+
+    from repro.serve import ServeEngine, EngineConfig, SamplingParams
+
+    engine = ServeEngine(model=model, params=params, config=EngineConfig())
+    rid = engine.submit(prompt_ids, max_new_tokens=16)
+    while engine.has_work():
+        for ev in engine.step():          # streams per-request, in order
+            ...
+
+Subsystem layout: :mod:`~repro.serve.scheduler` (step-level admission /
+chunked prefill under a token budget), :mod:`~repro.serve.block_cache`
+(ref-counted blocks + hash-chain prefix cache), :mod:`~repro.serve.adapters`
+(per-family cache layouts), :mod:`~repro.serve.runner` (the jitted
+decode/extend programs), :mod:`~repro.serve.sampling` (per-request PRNG
+streams), :mod:`~repro.serve.loadgen` (synthetic-user benchmark harness).
+"""
+from repro.serve.adapters import (
+    PagedKVAdapter, RecurrentStateAdapter, make_adapter,
+)
+from repro.serve.block_cache import BlockAllocator, CacheStats, hash_chain
+from repro.serve.engine import (
+    EngineConfig, GenOutput, ServeEngine, StreamEvent,
+)
+from repro.serve.loadgen import LoadReport, run_load
+from repro.serve.runner import StepRunner
+from repro.serve.sampling import GREEDY, SamplingParams
+from repro.serve.scheduler import (
+    PrefillWork, RequestMeta, RequestStatus, Scheduler, StepSchedule,
+)
+
+__all__ = [
+    "BlockAllocator",
+    "CacheStats",
+    "EngineConfig",
+    "GenOutput",
+    "GREEDY",
+    "LoadReport",
+    "PagedKVAdapter",
+    "PrefillWork",
+    "RecurrentStateAdapter",
+    "RequestMeta",
+    "RequestStatus",
+    "SamplingParams",
+    "ServeEngine",
+    "Scheduler",
+    "StepRunner",
+    "StepSchedule",
+    "StreamEvent",
+    "hash_chain",
+    "make_adapter",
+    "run_load",
+]

@@ -1,0 +1,191 @@
+"""Per-family cache adapters: how a request's context lives in engine memory.
+
+Two layouts behind one interface (``admit`` / ``snapshot`` / ``publish`` /
+``release``):
+
+  * :class:`PagedKVAdapter` (attention families: dense, moe) — the decode
+    working set is a slot batch of contiguous KV rows, backed by a ref-counted
+    page pool.  On admit, hash-chain prefix blocks that are resident in the
+    pool are *gathered* into the slot (no recompute); on prompt completion the
+    slot's full blocks are published back to the pool for future hits.  The
+    Pallas paged kernel (``kernels.decode_attention.paged_decode_attention``)
+    is the TPU-native hot path that reads the pool directly through a block
+    table, eliminating the admission gather; the CPU engine uses the gathered
+    working set, which is bit-identical.
+  * :class:`RecurrentStateAdapter` (rwkv6, rglru) — state is O(1) per
+    request, so a "block" is a *state snapshot at a block-aligned prompt
+    position*.  Prefix caching stores the recurrent state every
+    ``block_size`` tokens during prefill; an admit resumes from the deepest
+    snapshot whose hash chain matches.  Continuous batching is free: one
+    state slot per request, nothing grows with context length.
+
+Reused blocks are the very arrays computed the first time, so a prefix-cache
+hit is bit-identical to a cold prefill (tested).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import Model
+from repro.serve.block_cache import BlockAllocator, hash_chain
+
+PyTree = Any
+
+
+def slot_slice(tree: PyTree, slot: int) -> PyTree:
+    """Single-slot view (batch axis is 1 on every cache leaf)."""
+    return jax.tree_util.tree_map(lambda a: a[:, slot:slot + 1], tree)
+
+
+def slot_write(tree: PyTree, slot: int, sub: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda a, s: a.at[:, slot:slot + 1].set(s), tree, sub
+    )
+
+
+class PagedKVAdapter:
+    """Slot-contiguous KV working set + ref-counted page pool (attention)."""
+
+    recurrent = False
+
+    def __init__(self, model: Model, *, n_slots: int, max_len: int,
+                 num_blocks: int, block_size: int):
+        self.model = model
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.cache = model.init_cache(n_slots, max_len)
+        self.allocator = BlockAllocator(num_blocks, block_size)
+        # pool leaf: (layers, num_blocks, block_size, *kv_dims)
+        self.pool = jax.tree_util.tree_map(
+            lambda a: jnp.zeros(
+                (a.shape[0], num_blocks, block_size) + a.shape[3:], a.dtype
+            ),
+            self.cache,
+        )
+        self._held: Dict[int, List[int]] = {}
+
+    def fits(self, prompt_len: int, max_new_tokens: int) -> bool:
+        return prompt_len + max_new_tokens <= self.max_len
+
+    def admit(self, slot: int, prompt: Sequence[int]) -> int:
+        """Reuse resident prefix blocks; returns tokens already in the slot."""
+        bs = self.allocator.block_size
+        chain = hash_chain(prompt, bs)
+        n_max = (len(prompt) - 1) // bs   # >= 1 token must remain to prefill
+        hits: List[int] = []
+        for d in range(min(len(chain), n_max)):
+            bid = self.allocator.lookup(chain[d])
+            if bid is None:
+                break
+            hits.append(bid)
+        if hits:
+            idx = jnp.asarray(hits, jnp.int32)
+            n = len(hits) * bs
+
+            def gather(c, p):
+                pages = p[:, idx]                        # (L, n_hit, bs, ...)
+                rows = pages.reshape((p.shape[0], n) + p.shape[3:])
+                return c.at[:, slot, :n].set(rows)
+
+            self.cache = jax.tree_util.tree_map(gather, self.cache, self.pool)
+        self._held[slot] = hits
+        return len(hits) * bs
+
+    def snapshot(self, slot: int, prompt: Sequence[int], pos: int) -> None:
+        """No mid-prefill publishing for KV pages (rows land at completion)."""
+
+    def publish(self, slot: int, prompt: Sequence[int]) -> None:
+        """Copy the slot's full prompt blocks into the pool (best-effort)."""
+        bs = self.allocator.block_size
+        chain = hash_chain(prompt, bs)
+        held = self._held.setdefault(slot, [])
+        for d in range(len(held), len(chain)):
+            bid = self.allocator.lookup(chain[d])
+            if bid is None:
+                bid = self.allocator.allocate(chain[d])
+                if bid is None:            # pool exhausted: stop publishing
+                    break
+
+                def put(p, c):
+                    rows = c[:, slot, d * bs:(d + 1) * bs]
+                    return p.at[:, bid].set(rows)
+
+                self.pool = jax.tree_util.tree_map(put, self.pool, self.cache)
+            held.append(bid)
+
+    def release(self, slot: int) -> None:
+        for bid in self._held.pop(slot, []):
+            self.allocator.decref(bid)
+
+
+class RecurrentStateAdapter:
+    """O(1)-state slots + block-aligned state-snapshot prefix cache."""
+
+    recurrent = True
+
+    def __init__(self, model: Model, *, n_slots: int, max_len: int,
+                 num_blocks: int, block_size: int):
+        self.model = model
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.cache = model.init_cache(n_slots, max_len)
+        self.allocator = BlockAllocator(num_blocks, block_size)
+        self._states: Dict[int, PyTree] = {}     # block_id -> (.., 1, ..) state
+        self._held: Dict[int, List[int]] = {}
+
+    def fits(self, prompt_len: int, max_new_tokens: int) -> bool:
+        return True                              # state never grows
+
+    def admit(self, slot: int, prompt: Sequence[int]) -> int:
+        """Resume from the deepest matching state snapshot, if any."""
+        bs = self.allocator.block_size
+        chain = hash_chain(prompt, bs)
+        n_max = (len(prompt) - 1) // bs
+        for d in range(min(len(chain), n_max), 0, -1):
+            bid = self.allocator.lookup(chain[d - 1])
+            if bid is not None:
+                self.cache = slot_write(self.cache, slot, self._states[bid])
+                self._held[slot] = [bid]
+                return d * bs
+        self._held[slot] = []
+        return 0
+
+    def snapshot(self, slot: int, prompt: Sequence[int], pos: int) -> None:
+        """Publish the slot state after ``pos`` prompt tokens (block-aligned)."""
+        bs = self.allocator.block_size
+        if pos <= 0 or pos % bs or pos >= len(prompt):
+            return
+        h = hash_chain(prompt[:pos], bs)[-1]
+        if self.allocator.contains(h):
+            return
+        bid = self.allocator.allocate(h)
+        if bid is None:
+            return
+        self._states[bid] = slot_slice(self.cache, slot)
+        self._held.setdefault(slot, []).append(bid)
+
+    def publish(self, slot: int, prompt: Sequence[int]) -> None:
+        """Snapshots happen during prefill; nothing to flush at completion."""
+
+    def release(self, slot: int) -> None:
+        for bid in self._held.pop(slot, []):
+            self.allocator.decref(bid)
+
+
+def make_adapter(model: Model, *, n_slots: int, max_len: int,
+                 num_blocks: int, block_size: int):
+    family = model.cfg.family
+    if family in ("rwkv6", "rglru"):
+        cls = RecurrentStateAdapter
+    elif family in ("dense", "moe"):
+        cls = PagedKVAdapter
+    else:
+        raise NotImplementedError(
+            f"ServeEngine does not support family {family!r} yet "
+            "(encdec/vlm decode needs side inputs; use ServeSession)"
+        )
+    return cls(model, n_slots=n_slots, max_len=max_len,
+               num_blocks=num_blocks, block_size=block_size)

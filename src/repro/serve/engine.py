@@ -1,0 +1,277 @@
+"""`ServeEngine`: continuous-batching serving with streaming outputs.
+
+The inference-side counterpart of the staged training ``Session``: requests
+enter a queue, a step-level scheduler admits them into the in-flight decode
+batch (chunked prefill interleaves with decode instead of stalling it), and a
+per-family cache adapter keeps their context resident — paged ref-counted KV
+blocks for attention families, O(1)-state slots with snapshot prefix caching
+for recurrent ones.
+
+    engine = ServeEngine(model=model, params=params)
+    rid = engine.submit([1, 2, 3], max_new_tokens=8)
+    while engine.has_work():
+        for ev in engine.step():
+            print(ev.request_id, ev.token, ev.done)   # streams in token order
+
+Everything compiled is fixed-shape: one decode program over the whole slot
+batch (inactive slots masked, cache donated) plus one extend program per
+prefill-chunk length — admission and completion never trigger recompiles.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import Model
+from repro.serve.adapters import make_adapter, slot_slice, slot_write
+from repro.serve.runner import StepRunner
+from repro.serve.sampling import GREEDY, SamplingParams, request_key, token_key
+from repro.serve.scheduler import RequestMeta, Scheduler
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    max_slots: int = 8          # concurrent decode batch size
+    max_len: int = 64           # per-slot context rows (attention families)
+    block_size: int = 8         # prefix-cache block granularity (tokens)
+    num_blocks: int = 128       # pool pages / state snapshots
+    prefill_chunk: int = 16     # prompt tokens per prefill step
+    token_budget: int = 32      # scheduled tokens per engine step
+    k_cap: int = 64             # static top-k bound for the sampler
+    eos_token: Optional[int] = None
+
+    def __post_init__(self):
+        if self.prefill_chunk % self.block_size:
+            raise ValueError(
+                "prefill_chunk must be a multiple of block_size so chunk "
+                "boundaries align with prefix-cache blocks"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamEvent:
+    request_id: int
+    token: int
+    index: int                  # 0-based position in the generated stream
+    done: bool
+    finish_reason: Optional[str] = None    # "length" | "stop"
+
+
+@dataclasses.dataclass
+class GenOutput:
+    request_id: int
+    prompt_len: int
+    tokens: List[int]
+    finish_reason: str = ""
+    submit_time: float = 0.0
+    first_token_time: float = 0.0
+    finish_time: float = 0.0
+
+    @property
+    def latency(self) -> float:
+        return self.finish_time - self.submit_time
+
+    @property
+    def ttft(self) -> float:
+        return self.first_token_time - self.submit_time
+
+
+@dataclasses.dataclass
+class _Record:
+    prompt: tuple
+    max_new_tokens: int
+    sampling: SamplingParams
+    root_key: jax.Array
+    out: GenOutput
+
+
+class ServeEngine:
+    def __init__(self, *, model: Model, params: PyTree,
+                 config: EngineConfig = EngineConfig()):
+        self.model = model
+        self.params = params
+        self.config = config
+        self.adapter = make_adapter(
+            model, n_slots=config.max_slots, max_len=config.max_len,
+            num_blocks=config.num_blocks, block_size=config.block_size,
+        )
+        self.runner = StepRunner(model, k_cap=config.k_cap)
+        self.scheduler = Scheduler(
+            max_slots=config.max_slots, token_budget=config.token_budget,
+            prefill_chunk=config.prefill_chunk,
+        )
+        self._records: Dict[int, _Record] = {}
+        self._next_id = 0
+        S = config.max_slots
+        # per-slot decode-side state (host mirrors of the jit inputs)
+        self._slot_tok = np.zeros((S,), np.int32)
+        self._slot_pos = np.zeros((S,), np.int32)
+        self._slot_temp = np.zeros((S,), np.float32)
+        self._slot_topk = np.zeros((S,), np.int32)
+        self.steps = 0
+        self.tokens_decoded = 0
+
+    # -- submission -----------------------------------------------------------
+
+    def submit(self, prompt: Sequence[int], *, max_new_tokens: int = 16,
+               sampling: SamplingParams = GREEDY) -> int:
+        prompt = tuple(int(t) for t in prompt)
+        if not prompt:
+            raise ValueError("empty prompt")
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if not self.adapter.fits(len(prompt), max_new_tokens):
+            raise ValueError(
+                f"prompt_len={len(prompt)} + max_new_tokens={max_new_tokens} "
+                f"exceeds max_len={self.config.max_len}"
+            )
+        rid = self._next_id
+        self._next_id += 1
+        self._records[rid] = _Record(
+            prompt=prompt, max_new_tokens=max_new_tokens, sampling=sampling,
+            root_key=request_key(sampling, rid),
+            out=GenOutput(request_id=rid, prompt_len=len(prompt), tokens=[],
+                          submit_time=time.time()),
+        )
+        self.scheduler.add(RequestMeta(
+            request_id=rid, prompt_len=len(prompt),
+            max_new_tokens=max_new_tokens,
+        ))
+        return rid
+
+    def has_work(self) -> bool:
+        return self.scheduler.has_work()
+
+    def output(self, request_id: int) -> GenOutput:
+        return self._records[request_id].out
+
+    @property
+    def prefix_cache_stats(self):
+        return self.adapter.allocator.stats
+
+    # -- the engine step ------------------------------------------------------
+
+    def step(self) -> List[StreamEvent]:
+        events: List[StreamEvent] = []
+
+        for rid in self.scheduler.admit():
+            rec = self._records[rid]
+            meta = self.scheduler.requests[rid]
+            cached = self.adapter.admit(meta.slot, rec.prompt)
+            if cached:
+                self.scheduler.set_prefill_pos(rid, cached)
+
+        sched = self.scheduler.schedule()
+
+        for w in sched.prefill:
+            events.extend(self._run_prefill_chunk(w))
+
+        if sched.decode:
+            events.extend(self._run_decode(sched.decode))
+
+        self.steps += 1
+        return events
+
+    def _run_prefill_chunk(self, w) -> List[StreamEvent]:
+        rec = self._records[w.request_id]
+        chunk = jnp.asarray([rec.prompt[w.start:w.end]], jnp.int32)   # (1, C)
+        sub = slot_slice(self.adapter.cache, w.slot)
+        start = jnp.asarray([w.start], jnp.int32)
+        logits, sub = self.runner.extend(self.params, chunk, sub, start)
+        self.adapter.cache = slot_write(self.adapter.cache, w.slot, sub)
+        self.adapter.snapshot(w.slot, rec.prompt, w.end)
+        self.scheduler.note_prefilled(w)
+        if not w.last:
+            return []
+
+        # prompt complete: publish prefix blocks, sample the first token
+        self.adapter.publish(w.slot, rec.prompt)
+        sp = rec.sampling
+        tok = self.runner.sample1(
+            logits,
+            token_key(rec.root_key, 0)[None],
+            jnp.asarray([sp.temperature], jnp.float32),
+            jnp.asarray([sp.top_k], jnp.int32),
+        )
+        t = int(tok[0])
+        rec.out.first_token_time = time.time()
+        self._slot_tok[w.slot] = t
+        self._slot_pos[w.slot] = len(rec.prompt)
+        self._slot_temp[w.slot] = sp.temperature
+        self._slot_topk[w.slot] = sp.top_k
+        return [self._emit(w.request_id, t)]
+
+    def _run_decode(self, decode_ids) -> List[StreamEvent]:
+        S = self.config.max_slots
+        active = np.zeros((S,), bool)
+        keys = np.zeros((S, 2), np.uint32)
+        slot_of = {}
+        for rid in decode_ids:
+            meta = self.scheduler.requests[rid]
+            rec = self._records[rid]
+            active[meta.slot] = True
+            slot_of[rid] = meta.slot
+            keys[meta.slot] = np.asarray(
+                token_key(rec.root_key, meta.generated)
+            )
+        tok_out, self.adapter.cache = self.runner.decode(
+            self.params,
+            jnp.asarray(self._slot_tok)[:, None],
+            self.adapter.cache,
+            jnp.asarray(self._slot_pos),
+            jnp.asarray(active),
+            jnp.asarray(keys),
+            jnp.asarray(self._slot_temp),
+            jnp.asarray(self._slot_topk),
+        )
+        tok_np = np.asarray(tok_out)
+        events = []
+        for rid in decode_ids:
+            slot = slot_of[rid]
+            t = int(tok_np[slot])
+            self.scheduler.note_decoded(rid)
+            self._slot_tok[slot] = t
+            self._slot_pos[slot] += 1
+            self.tokens_decoded += 1
+            events.append(self._emit(rid, t))
+        return events
+
+    def _emit(self, rid: int, token: int) -> StreamEvent:
+        rec = self._records[rid]
+        rec.out.tokens.append(token)
+        idx = len(rec.out.tokens) - 1
+        done_len = self.scheduler.is_done(rid)
+        done_eos = (self.config.eos_token is not None
+                    and token == self.config.eos_token)
+        if done_len or done_eos:
+            meta = self.scheduler.requests[rid]
+            self.adapter.release(meta.slot)
+            self.scheduler.finish(rid)
+            rec.out.finish_reason = "length" if done_len else "stop"
+            rec.out.finish_time = time.time()
+            return StreamEvent(rid, token, idx, True, rec.out.finish_reason)
+        return StreamEvent(rid, token, idx, False)
+
+    # -- convenience ----------------------------------------------------------
+
+    def run_to_completion(self) -> List[StreamEvent]:
+        events: List[StreamEvent] = []
+        while self.has_work():
+            events.extend(self.step())
+        return events
+
+    def generate_batch(
+        self, prompts: Sequence[Sequence[int]], *, max_new_tokens: int = 16,
+        sampling: SamplingParams = GREEDY,
+    ) -> List[GenOutput]:
+        rids = [self.submit(p, max_new_tokens=max_new_tokens, sampling=sampling)
+                for p in prompts]
+        self.run_to_completion()
+        return [self.output(r) for r in rids]

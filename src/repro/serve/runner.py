@@ -1,0 +1,80 @@
+"""Jitted model-step factories shared by :class:`ServeEngine` and
+:class:`~repro.api.serving.ServeSession`.
+
+Two compiled entry points per model family:
+
+  * ``decode`` — one batched token step over the engine's slot batch, with
+    in-jit sampling and an ``active`` mask: inactive / mid-prefill slots pass
+    their cache state through untouched, so one fixed-shape program serves
+    every mix of decoding, prefilling, and empty slots (no recompiles as
+    requests come and go).
+  * ``extend`` — a ``jax.lax.scan`` of the single-token decode step over a
+    token chunk: the compiled chunked-prefill primitive (one host round-trip
+    per chunk instead of one per token) that also replaces the old
+    ``ServeSession._prefill_recurrent`` Python loop.
+
+Both donate the cache argument (``donate_argnums``), so stepping never copies
+the KV/state buffers — the decode loop is update-in-place end to end.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import Model
+from repro.serve.sampling import make_sample_fn
+
+PyTree = Any
+
+
+def mask_tree(new: PyTree, old: PyTree, active: jax.Array) -> PyTree:
+    """Per-slot select: active rows take ``new``, the rest keep ``old``.
+
+    Every cache leaf in every family carries the batch (slot) dimension at
+    axis 1 — (layers, batch, ...) — which this relies on.
+    """
+
+    def f(n, o):
+        shape = [1] * n.ndim
+        shape[1] = active.shape[0]
+        return jnp.where(active.reshape(shape), n, o)
+
+    return jax.tree_util.tree_map(f, new, old)
+
+
+class StepRunner:
+    """Holds the jitted decode/extend programs for one (model, params) pair."""
+
+    def __init__(self, model: Model, *, k_cap: int = 64):
+        self.model = model
+        self._sample = make_sample_fn(k_cap)
+        self.sample1 = jax.jit(self._sample)
+        self.decode = jax.jit(self._decode_fn, donate_argnums=(2,))
+        self.extend = jax.jit(self._extend_fn, donate_argnums=(2,))
+
+    # decode(params, tok (S,1), cache, pos (S,), active (S,) bool,
+    #        keys (S,2) u32, temp (S,) f32, topk (S,) i32)
+    #   -> (next_tok (S,), new_cache)
+    def _decode_fn(self, params, tok, cache, pos, active, keys, temp, topk):
+        logits, new_cache = self.model.decode_step(params, tok, cache, pos)
+        nxt = self._sample(logits[:, -1], keys, temp, topk)
+        nxt = jnp.where(active, nxt, 0)
+        return nxt, mask_tree(new_cache, cache, active)
+
+    # extend(params, tokens (B, C), cache, start (B,))
+    #   -> (last_logits (B, V), new_cache)
+    def _extend_fn(self, params, tokens, cache, start):
+        ts = jnp.arange(tokens.shape[1])
+
+        def body(carry, xs):
+            cache = carry
+            tok_t, t = xs                                 # (B,), ()
+            logits, cache = self.model.decode_step(
+                params, tok_t[:, None], cache, start + t
+            )
+            return cache, logits[:, -1]
+
+        cache, logits_seq = jax.lax.scan(body, cache, (tokens.T, ts))
+        return logits_seq[-1], cache

@@ -1,0 +1,77 @@
+"""Per-request sampling: greedy by default, temperature / top-k opt-in.
+
+Every request carries its own PRNG stream (``SamplingParams.seed``), folded
+with the token index — two requests with the same seed draw identical chains
+regardless of how they are batched or interleaved by the scheduler, which is
+what makes sampled serving reproducible under continuous batching.
+
+``make_sample_fn`` builds a jit-friendly batched sampler: all inputs are
+arrays, so one compiled function serves every mix of greedy / sampled rows.
+Greedy rows (temperature 0) are exact argmax — the deterministic-parity mode
+used by the engine-vs-ServeSession tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 0.0    # 0 => greedy argmax
+    top_k: int = 0              # 0 => no restriction
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError("temperature must be >= 0")
+        if self.top_k < 0:
+            raise ValueError("top_k must be >= 0")
+
+
+GREEDY = SamplingParams()
+
+
+def request_key(params: SamplingParams, request_id: int) -> jax.Array:
+    """Root key for one request's sampling stream."""
+    return jax.random.fold_in(jax.random.PRNGKey(params.seed), request_id)
+
+
+def token_key(root: jax.Array, token_index: int) -> jax.Array:
+    return jax.random.fold_in(root, token_index)
+
+
+def make_sample_fn(k_cap: int = 64) -> Callable:
+    """Returns ``sample(logits, keys, temperature, top_k) -> tokens``.
+
+    logits (B, V) f32; keys (B, 2) uint32 (one PRNG key per row);
+    temperature (B,) f32; top_k (B,) int32 (0 = unrestricted).
+
+    ``k_cap`` statically bounds top-k: per-row k is clipped to
+    ``min(k_cap, V)``.  Rows with temperature 0 take the argmax and never
+    touch their key.
+    """
+
+    def sample(logits, keys, temperature, top_k):
+        B, V = logits.shape
+        lf = logits.astype(jnp.float32)
+        greedy = jnp.argmax(lf, axis=-1).astype(jnp.int32)
+
+        cap = min(k_cap, V)
+        # top-k threshold per row: the k-th largest logit; k=0 disables
+        topv = jax.lax.top_k(lf, cap)[0]                     # (B, cap)
+        kk = jnp.clip(top_k, 1, cap)
+        thresh = jnp.take_along_axis(topv, (kk - 1)[:, None], axis=-1)  # (B,1)
+        restricted = jnp.where((top_k > 0)[:, None] & (lf < thresh), -jnp.inf, lf)
+
+        temp = jnp.maximum(temperature, 1e-6)[:, None]
+        sampled = jax.vmap(
+            lambda key, row: jax.random.categorical(key, row)
+        )(keys, restricted / temp).astype(jnp.int32)
+
+        return jnp.where(temperature <= 0.0, greedy, sampled)
+
+    return sample

@@ -87,6 +87,57 @@ def test_decode_attention_matches_oracle(case):
 
 
 # ---------------------------------------------------------------------------
+# paged decode attention (block-table over a shared page pool)
+# ---------------------------------------------------------------------------
+
+PAGED_CASES = [
+    # B, pool_pages, page_size, pages_per_row, H, Hkv, D, window, dtype
+    (2, 12, 16, 4, 4, 4, 64, None, jnp.float32),
+    (3, 16, 8, 5, 8, 2, 64, None, jnp.float32),
+    (2, 10, 16, 3, 4, 1, 32, 24, jnp.float32),
+    (2, 8, 8, 4, 2, 2, 128, None, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", PAGED_CASES, ids=[str(c[:8]) for c in PAGED_CASES])
+def test_paged_decode_attention_matches_oracle(case):
+    B, P, bs, NP, H, Hkv, D, window, dtype = case
+    ks = jax.random.split(KEY, 5)
+    q = _rand(ks[0], (B, 1, H, D), dtype)
+    k_pages = _rand(ks[1], (P, bs, Hkv, D), dtype)
+    v_pages = _rand(ks[2], (P, bs, Hkv, D), dtype)
+    tbl = jax.random.randint(ks[3], (B, NP), 0, P, jnp.int32)
+    valid = jax.random.randint(ks[4], (B,), 1, NP * bs + 1)
+    out = ops.paged_decode_attention(q, k_pages, v_pages, tbl, valid,
+                                     window=window, interpret=True)
+    ref = R.paged_decode_attention_ref(q, k_pages, v_pages, tbl, valid,
+                                       window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), ref.astype(jnp.float32), atol=tol, rtol=tol
+    )
+
+
+def test_paged_decode_shared_prefix_pages_match_dense():
+    """Rows sharing pool pages (a cached prefix) == dense attention on the
+    per-row gathered cache — the paged path reads shared pages in place."""
+    B, P, bs, NP, H, Hkv, D = 3, 8, 8, 4, 4, 2, 32
+    ks = jax.random.split(KEY, 3)
+    q = _rand(ks[0], (B, 1, H, D), jnp.float32)
+    k_pages = _rand(ks[1], (P, bs, Hkv, D), jnp.float32)
+    v_pages = _rand(ks[2], (P, bs, Hkv, D), jnp.float32)
+    # all rows share prefix pages [0, 1]; suffixes diverge
+    tbl = jnp.asarray([[0, 1, 2, 3], [0, 1, 4, 5], [0, 1, 6, 7]], jnp.int32)
+    valid = jnp.asarray([NP * bs, 25, 17], jnp.int32)
+    out = ops.paged_decode_attention(q, k_pages, v_pages, tbl, valid,
+                                     interpret=True)
+    k = k_pages[tbl].reshape(B, NP * bs, Hkv, D)
+    v = v_pages[tbl].reshape(B, NP * bs, Hkv, D)
+    dense = R.decode_attention_ref(q, k, v, valid)
+    np.testing.assert_allclose(out, dense, atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
 # RG-LRU scan
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,363 @@
+"""repro.serve: allocator lifecycle, scheduler invariants (property-based),
+engine-vs-ServeSession greedy parity, and prefix-cache bit-identity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import ServeSession
+from repro.configs import smoke_config
+from repro.models.api import get_model
+from repro.serve import (
+    BlockAllocator, EngineConfig, RequestMeta, SamplingParams, Scheduler,
+    ServeEngine, hash_chain,
+)
+
+from tests._hypothesis_compat import given, settings, st
+
+SMOKE_CONFIG = EngineConfig(
+    max_slots=2, max_len=48, block_size=4, num_blocks=32,
+    prefill_chunk=8, token_budget=16,
+)
+
+
+@pytest.fixture(scope="module")
+def built():
+    """One (model, params, session, engine) per arch, built lazily."""
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = smoke_config(arch)
+            model = get_model(cfg)
+            params, _ = model.init_params(key=jax.random.PRNGKey(0))
+            cache[arch] = (cfg, model, params)
+        return cache[arch]
+
+    return get
+
+
+# ---------------------------------------------------------------------------
+# BlockAllocator
+# ---------------------------------------------------------------------------
+
+
+def test_allocator_alloc_free_cycle():
+    a = BlockAllocator(4, 8)
+    bids = [a.allocate() for _ in range(4)]
+    assert sorted(bids) == [0, 1, 2, 3]
+    assert a.allocate() is None                 # exhausted: all referenced
+    for b in bids:
+        a.free(b)
+    assert a.num_free == 4
+    assert a.allocate() is not None             # anonymous blocks recycle
+
+
+def test_allocator_refcount_and_lookup():
+    a = BlockAllocator(4, 8)
+    bid = a.allocate(h=123)
+    assert a.refcount(bid) == 1
+    hit = a.lookup(123)
+    assert hit == bid and a.refcount(bid) == 2
+    a.decref(bid)
+    assert a.refcount(bid) == 1
+    a.decref(bid)
+    # at refcount 0 a hashed block is cached, not freed: still a hit target
+    assert a.refcount(bid) == 0
+    assert a.contains(123)
+    assert a.lookup(123) == bid                 # resurrected
+    assert a.refcount(bid) == 1
+
+
+def test_allocator_lru_eviction():
+    a = BlockAllocator(2, 8)
+    b0 = a.allocate(h=10)
+    b1 = a.allocate(h=11)
+    a.decref(b0)
+    a.decref(b1)                                # both cached; b0 is LRU
+    b2 = a.allocate(h=12)                       # evicts b0
+    assert b2 == b0
+    assert not a.contains(10)
+    assert a.contains(11) and a.contains(12)
+    assert a.stats.evictions == 1
+
+
+def test_allocator_referenced_blocks_never_evicted():
+    a = BlockAllocator(2, 8)
+    b0 = a.allocate(h=10)                       # stays referenced
+    b1 = a.allocate(h=11)
+    a.decref(b1)
+    assert a.allocate(h=12) == b1               # only the cached one evictable
+    assert a.allocate(h=13) is None             # everything referenced now
+    assert a.contains(10)
+
+
+def test_allocator_error_paths():
+    a = BlockAllocator(2, 8)
+    with pytest.raises(ValueError):
+        a.decref(0)                             # not live
+    bid = a.allocate(h=5)
+    with pytest.raises(ValueError):
+        a.allocate(h=5)                         # duplicate hash
+    a.incref(bid)
+    a.decref(bid)
+    assert a.refcount(bid) == 1
+
+
+def test_hash_chain_full_blocks_only():
+    assert hash_chain([1, 2, 3], 4) == []
+    c1 = hash_chain([1, 2, 3, 4], 4)
+    c2 = hash_chain([1, 2, 3, 4, 5, 6, 7, 8], 4)
+    assert len(c1) == 1 and len(c2) == 2
+    assert c2[0] == c1[0]                       # chained: shared prefix, same hash
+    assert c2[1] != c1[0]
+    assert hash_chain([9, 2, 3, 4, 5, 6, 7, 8], 4)[1] != c2[1]  # prefix differs
+
+
+# ---------------------------------------------------------------------------
+# Scheduler invariants (property-based)
+# ---------------------------------------------------------------------------
+
+
+def _drive(max_slots, token_budget, prefill_chunk, reqs):
+    """Run the scheduler to completion, checking invariants each step.
+    Returns (finish_step_by_rid, steps_taken)."""
+    sched = Scheduler(max_slots=max_slots, token_budget=token_budget,
+                      prefill_chunk=prefill_chunk)
+    for i, (plen, mnt) in enumerate(reqs):
+        sched.add(RequestMeta(request_id=i, prompt_len=plen,
+                              max_new_tokens=mnt))
+    finish = {}
+    admitted_order = []
+    limit = 10_000
+    for step in range(limit):
+        if not sched.has_work():
+            break
+        admitted_order.extend(sched.admit())
+        s = sched.schedule()
+
+        # budget is a hard ceiling
+        assert s.total_tokens <= token_budget
+        # slot exclusivity: each slot owned by at most one unfinished request
+        slots = [r.slot for r in sched.requests.values() if r.slot is not None]
+        assert len(slots) == len(set(slots))
+        assert all(0 <= sl < max_slots for sl in slots)
+
+        for w in s.prefill:
+            sched.note_prefilled(w)
+        for rid in s.decode:
+            sched.note_decoded(rid)
+        for rid in list(s.decode) + [w.request_id for w in s.prefill if w.last]:
+            if sched.is_done(rid) and rid not in finish:
+                finish[rid] = step
+                sched.finish(rid)
+    else:
+        raise AssertionError("scheduler did not drain (starvation)")
+
+    # FCFS admission: slots are granted in submission order
+    assert admitted_order == sorted(admitted_order)
+    assert len(finish) == len(reqs)             # everyone finished
+    return finish, step
+
+
+def test_scheduler_basic_drain():
+    finish, _ = _drive(2, 16, 8, [(10, 4), (3, 2), (20, 1)])
+    assert set(finish) == {0, 1, 2}
+
+
+def test_scheduler_decode_prioritized_over_prefill():
+    sched = Scheduler(max_slots=2, token_budget=8, prefill_chunk=8)
+    sched.add(RequestMeta(request_id=0, prompt_len=4, max_new_tokens=4))
+    sched.admit()
+    w = sched.schedule().prefill[0]
+    sched.note_prefilled(w)                     # now RUNNING
+    sched.add(RequestMeta(request_id=1, prompt_len=32, max_new_tokens=1))
+    sched.admit()
+    s = sched.schedule()
+    assert s.decode == (0,)                     # decode always gets its token
+    assert s.prefill and s.prefill[0].request_id == 1
+    assert s.prefill[0].end - s.prefill[0].start == 7   # budget 8 - 1 decode
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    max_slots=st.integers(1, 4),
+    chunk=st.integers(1, 8),
+    extra=st.integers(0, 8),
+    reqs=st.lists(
+        st.tuples(st.integers(1, 25), st.integers(1, 6)),
+        min_size=1, max_size=12,
+    ),
+)
+def test_scheduler_invariants_property(max_slots, chunk, extra, reqs):
+    """No step exceeds the budget, admission is FCFS, slots are exclusive,
+    and every request terminates — for arbitrary request mixes."""
+    _drive(max_slots, chunk + extra, chunk, reqs)
+
+
+# ---------------------------------------------------------------------------
+# engine vs one-shot ServeSession (greedy parity)
+# ---------------------------------------------------------------------------
+
+PARITY_ARCHS = ["deepseek-7b", "qwen3-moe-30b-a3b", "rwkv6-7b"]
+
+
+@pytest.mark.parametrize("arch", PARITY_ARCHS)
+def test_engine_matches_one_shot_generate(arch, built):
+    cfg, model, params = built(arch)
+    session = ServeSession(model=model, params=params)
+    key = jax.random.PRNGKey(1)
+    prompts = jax.random.randint(key, (3, 11), 0, cfg.vocab)
+    n_new = 5
+    # one-shot oracle: (B, 1 + n_new) including the prefill-sampled token
+    oracle = session.generate(prompts, max_new_tokens=n_new).tokens
+
+    engine = ServeEngine(model=model, params=params, config=SMOKE_CONFIG)
+    outs = engine.generate_batch(
+        [prompts[i].tolist() for i in range(3)], max_new_tokens=n_new + 1
+    )
+    for i, out in enumerate(outs):
+        assert out.tokens == np.asarray(oracle[i]).tolist()
+        assert out.finish_reason == "length"
+
+
+def test_engine_sampled_matches_session_sampled(built):
+    """Same per-request key schedule => batched one-shot and engine rows
+    draw identical sampled chains (request id == row index)."""
+    cfg, model, params = built("deepseek-7b")
+    session = ServeSession(model=model, params=params)
+    sp = SamplingParams(temperature=0.9, top_k=16, seed=7)
+    prompts = jax.random.randint(jax.random.PRNGKey(2), (2, 9), 0, cfg.vocab)
+    oracle = session.generate(prompts, max_new_tokens=4, sampling=sp).tokens
+
+    engine = ServeEngine(model=model, params=params, config=SMOKE_CONFIG)
+    outs = engine.generate_batch(
+        [prompts[i].tolist() for i in range(2)], max_new_tokens=5, sampling=sp
+    )
+    for i, out in enumerate(outs):
+        assert out.tokens == np.asarray(oracle[i]).tolist()
+
+
+def test_engine_eos_stops_early(built):
+    cfg, model, params = built("deepseek-7b")
+    session = ServeSession(model=model, params=params)
+    prompt = jax.random.randint(jax.random.PRNGKey(3), (1, 8), 0, cfg.vocab)
+    ref = [int(t) for t in session.generate(prompt, max_new_tokens=7).tokens[0]]
+    eos = ref[3]                                # force a stop mid-stream
+    import dataclasses
+    engine = ServeEngine(
+        model=model, params=params,
+        config=dataclasses.replace(SMOKE_CONFIG, eos_token=eos),
+    )
+    out = engine.generate_batch([prompt[0].tolist()], max_new_tokens=8)[0]
+    assert out.finish_reason == "stop"
+    assert out.tokens == ref[:4]                # up to and including eos
+
+
+# ---------------------------------------------------------------------------
+# prefix cache: a hit is bit-identical to a cold prefill
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["deepseek-7b", "rwkv6-7b"])
+def test_prefix_cache_hit_is_bit_identical(arch, built):
+    cfg, model, params = built(arch)
+    prompt = jax.random.randint(
+        jax.random.PRNGKey(4), (14,), 0, cfg.vocab
+    ).tolist()
+    engine = ServeEngine(model=model, params=params, config=SMOKE_CONFIG)
+    cold = engine.generate_batch([prompt], max_new_tokens=6)[0]
+    q_before = engine.prefix_cache_stats.hit_blocks
+    warm = engine.generate_batch([prompt], max_new_tokens=6)[0]
+    assert engine.prefix_cache_stats.hit_blocks > q_before   # actually reused
+    assert warm.tokens == cold.tokens
+
+
+def test_prefix_cache_shared_prefix_across_requests(built):
+    cfg, model, params = built("deepseek-7b")
+    rng = np.random.default_rng(5)
+    prefix = rng.integers(0, cfg.vocab, size=12).tolist()
+    a = prefix + rng.integers(0, cfg.vocab, size=4).tolist()
+    b = prefix + rng.integers(0, cfg.vocab, size=4).tolist()
+
+    engine = ServeEngine(model=model, params=params, config=SMOKE_CONFIG)
+    shared = engine.generate_batch([a, b], max_new_tokens=4)
+    assert engine.prefix_cache_stats.hit_blocks > 0
+
+    solo = []
+    for p in (a, b):
+        e = ServeEngine(model=model, params=params, config=SMOKE_CONFIG)
+        solo.append(e.generate_batch([p], max_new_tokens=4)[0])
+    for got, want in zip(shared, solo):
+        assert got.tokens == want.tokens
+
+
+# ---------------------------------------------------------------------------
+# engine behavior
+# ---------------------------------------------------------------------------
+
+
+def test_streaming_events_in_order_and_done_once(built):
+    cfg, model, params = built("deepseek-7b")
+    engine = ServeEngine(model=model, params=params, config=SMOKE_CONFIG)
+    rids = [engine.submit([1 + i, 2, 3, 4, 5], max_new_tokens=4)
+            for i in range(3)]
+    seen = {r: [] for r in rids}
+    dones = []
+    while engine.has_work():
+        for ev in engine.step():
+            seen[ev.request_id].append(ev)
+            if ev.done:
+                dones.append(ev.request_id)
+    for rid in rids:
+        idxs = [e.index for e in seen[rid]]
+        assert idxs == list(range(len(idxs)))   # per-request token order
+        assert [e.done for e in seen[rid][:-1]] == [False] * (len(idxs) - 1)
+        assert seen[rid][-1].done
+        toks = [e.token for e in seen[rid]]
+        assert toks == engine.output(rid).tokens
+    assert sorted(dones) == sorted(rids)        # each finishes exactly once
+
+
+def test_admit_mid_decode_continuous_batching(built):
+    """A request submitted while another decodes gets tokens before the first
+    finishes — the continuous-batching property."""
+    cfg, model, params = built("deepseek-7b")
+    engine = ServeEngine(model=model, params=params, config=SMOKE_CONFIG)
+    r0 = engine.submit([5, 6, 7, 8], max_new_tokens=10)
+    engine.step()                               # r0 prefilled, starts decoding
+    r1 = engine.submit([9, 10, 11, 12], max_new_tokens=2)
+    first_r1 = None
+    r0_done_at = None
+    step = 1
+    while engine.has_work():
+        for ev in engine.step():
+            if ev.request_id == r1 and first_r1 is None:
+                first_r1 = step
+            if ev.request_id == r0 and ev.done:
+                r0_done_at = step
+        step += 1
+    assert first_r1 is not None and r0_done_at is not None
+    assert first_r1 < r0_done_at
+
+
+def test_submit_validation(built):
+    cfg, model, params = built("deepseek-7b")
+    engine = ServeEngine(model=model, params=params, config=SMOKE_CONFIG)
+    with pytest.raises(ValueError):
+        engine.submit([], max_new_tokens=4)
+    with pytest.raises(ValueError):
+        engine.submit([1, 2], max_new_tokens=0)
+    with pytest.raises(ValueError):
+        engine.submit(list(range(60)), max_new_tokens=4)  # exceeds max_len
+
+
+def test_engine_config_validation():
+    with pytest.raises(ValueError):
+        EngineConfig(prefill_chunk=6, block_size=4)
+
+
+def test_unsupported_family_raises(built):
+    cfg, model, params = built("whisper-medium")
+    with pytest.raises(NotImplementedError):
+        ServeEngine(model=model, params=params, config=SMOKE_CONFIG)
