@@ -17,6 +17,13 @@ fi
 
 python -m pytest -x -q
 
+echo "[ci] static analysis gate (custody-taint, use-after-donate,"
+echo "[ci]   jit-purity, kernel-parity-coverage, sharding-rule-coverage):"
+echo "[ci]   blocking; suppressions live in analysis-baseline.json, the"
+echo "[ci]   full report lands in analysis-report.json"
+PYTHONPATH=src python -m repro.analysis \
+    --baseline analysis-baseline.json --json analysis-report.json
+
 echo "[ci] session smoke (synthetic backend)"
 PYTHONPATH=src python benchmarks/session_smoke.py
 

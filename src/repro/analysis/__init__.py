@@ -1,0 +1,24 @@
+"""repro.analysis: AST-based static checks of the repo's invariants.
+
+Five rules turn runtime conventions into a CI gate (see RULES.md):
+
+  custody-taint            private device reads never reach serialization /
+                           network / checkpoint sinks; feed crossings need a
+                           transfer guard or CustodyEvent audit
+  use-after-donate         donate_argnums buffers are dead after the call
+  jit-purity               traced functions stay host-effect-free
+  kernel-parity-coverage   every public kernel has an oracle + parity test
+  sharding-rule-coverage   every logical axis is in the rule tables
+
+Run: ``python -m repro.analysis [--json out.json] [--baseline file.json]``
+"""
+from repro.analysis.core import (
+    AnalysisResult, Baseline, Rule, Suppression, Violation, all_rules,
+    register, run_analysis,
+)
+from repro.analysis.project import Module, Project
+
+__all__ = [
+    "AnalysisResult", "Baseline", "Module", "Project", "Rule", "Suppression",
+    "Violation", "all_rules", "register", "run_analysis",
+]

@@ -1,0 +1,99 @@
+"""CLI: ``python -m repro.analysis`` — the static CI gate.
+
+Exit codes: 0 clean, 1 violations (after baseline filtering), 2 usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.analysis.core import Baseline, all_rules, run_analysis
+
+
+def _find_root(start: Path) -> Path:
+    """Walk up from ``start`` to the directory holding pyproject.toml."""
+    cur = start.resolve()
+    for cand in (cur, *cur.parents):
+        if (cand / "pyproject.toml").is_file():
+            return cand
+    return cur
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static analysis of the repo's custody/jit invariants.",
+    )
+    ap.add_argument("--root", default=None,
+                    help="project root (default: nearest pyproject.toml)")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule subset (default: all)")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline suppression file (analysis-baseline.json)")
+    ap.add_argument("--json", dest="json_out", default=None, metavar="FILE",
+                    help="write the full report as JSON ('-' for stdout)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the available rules and exit")
+    ap.add_argument("-q", "--quiet", action="store_true",
+                    help="suppress per-violation text output")
+    return ap
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+
+    if args.list_rules:
+        for name, cls in sorted(all_rules().items()):
+            print(f"{name}: {cls.description}")
+        return 0
+
+    root = Path(args.root) if args.root else _find_root(Path.cwd())
+    rules = [r.strip() for r in args.rules.split(",")] if args.rules else None
+
+    baseline = None
+    if args.baseline:
+        bl_path = Path(args.baseline)
+        if not bl_path.is_absolute():
+            bl_path = root / bl_path
+        if not bl_path.is_file():
+            print(f"error: baseline file not found: {bl_path}",
+                  file=sys.stderr)
+            return 2
+        try:
+            baseline = Baseline.load(bl_path)
+        except (ValueError, KeyError, json.JSONDecodeError) as e:
+            print(f"error: bad baseline file: {e}", file=sys.stderr)
+            return 2
+
+    try:
+        result = run_analysis(root, rules=rules, baseline=baseline)
+    except KeyError as e:
+        print(f"error: {e.args[0]}", file=sys.stderr)
+        return 2
+
+    if args.json_out:
+        payload = json.dumps(result.to_json(), indent=2)
+        if args.json_out == "-":
+            print(payload)
+        else:
+            Path(args.json_out).write_text(payload + "\n")
+
+    if not args.quiet:
+        for v in result.violations:
+            print(v.format())
+        for s in result.unused_suppressions:
+            print(f"warning: unused baseline suppression: {s.rule} "
+                  f"{s.path}" + (f" [{s.symbol}]" if s.symbol else ""),
+                  file=sys.stderr)
+        n = len(result.violations)
+        sup = f" ({result.suppressed} baselined)" if result.suppressed else ""
+        status = "clean" if result.ok else f"{n} violation(s)"
+        print(f"repro.analysis: {status}{sup} "
+              f"[{', '.join(result.rules_run)}]")
+    return 0 if result.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

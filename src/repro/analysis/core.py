@@ -1,0 +1,188 @@
+"""Rule engine: violations, registry, baseline suppression, reporting.
+
+The analyzer turns the repo's runtime invariants (custody guards, donation
+discipline, trace purity, parity/sharding coverage) into a static CI gate:
+
+    PYTHONPATH=src python -m repro.analysis --baseline analysis-baseline.json
+
+Exit code 0 means every enabled rule is clean (modulo baselined
+suppressions, each of which must carry a one-line reason).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Type
+
+from repro.analysis.project import Project
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Violation:
+    path: str                 # project-root-relative
+    line: int
+    rule: str
+    message: str
+    symbol: str = ""          # enclosing qualname (Class.method / function)
+
+    def format(self) -> str:
+        sym = f" [{self.symbol}]" if self.symbol else ""
+        return f"{self.path}:{self.line}: {self.rule}: {self.message}{sym}"
+
+    def to_json(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+
+class Rule:
+    """One invariant checker.  Subclasses set ``name``/``description`` and
+    implement ``run(project) -> list[Violation]``."""
+
+    name: str = ""
+    description: str = ""
+
+    def run(self, project: Project) -> List[Violation]:  # pragma: no cover
+        raise NotImplementedError
+
+    def violation(self, module_path: str, node, message: str,
+                  symbol: str = "") -> Violation:
+        return Violation(path=module_path, line=getattr(node, "lineno", 0),
+                         rule=self.name, message=message, symbol=symbol)
+
+
+_REGISTRY: Dict[str, Type[Rule]] = {}
+
+
+def register(cls: Type[Rule]) -> Type[Rule]:
+    assert cls.name, f"{cls} needs a name"
+    _REGISTRY[cls.name] = cls
+    return cls
+
+
+def all_rules() -> Dict[str, Type[Rule]]:
+    # importing the rules package populates the registry
+    import repro.analysis.rules  # noqa: F401
+    return dict(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# Baseline suppression
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Suppression:
+    rule: str
+    path: str
+    reason: str
+    symbol: Optional[str] = None
+
+    def matches(self, v: Violation) -> bool:
+        if v.rule != self.rule or v.path != self.path:
+            return False
+        if self.symbol is not None and v.symbol != self.symbol:
+            return False
+        return True
+
+
+class Baseline:
+    """``analysis-baseline.json``: intentional, justified suppressions.
+
+    Format::
+
+        {"version": 1,
+         "suppressions": [
+             {"rule": "...", "path": "...", "symbol": "...", "reason": "..."}
+         ]}
+
+    ``symbol`` is optional (omit to suppress the rule for the whole file);
+    ``reason`` is mandatory — an unexplained suppression is itself an error.
+    """
+
+    def __init__(self, suppressions: Sequence[Suppression] = ()):
+        self.suppressions = list(suppressions)
+        self._hits = [0] * len(self.suppressions)
+
+    @classmethod
+    def load(cls, path) -> "Baseline":
+        data = json.loads(Path(path).read_text())
+        sups = []
+        for i, entry in enumerate(data.get("suppressions", [])):
+            if not entry.get("reason"):
+                raise ValueError(
+                    f"baseline entry #{i} ({entry.get('rule')}, "
+                    f"{entry.get('path')}) has no reason"
+                )
+            sups.append(Suppression(
+                rule=entry["rule"], path=entry["path"],
+                symbol=entry.get("symbol"), reason=entry["reason"],
+            ))
+        return cls(sups)
+
+    def filter(self, violations: Sequence[Violation]) -> List[Violation]:
+        kept = []
+        for v in violations:
+            for i, s in enumerate(self.suppressions):
+                if s.matches(v):
+                    self._hits[i] += 1
+                    break
+            else:
+                kept.append(v)
+        return kept
+
+    def unused(self) -> List[Suppression]:
+        return [s for s, h in zip(self.suppressions, self._hits) if h == 0]
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class AnalysisResult:
+    violations: List[Violation]           # after baseline filtering
+    suppressed: int
+    unused_suppressions: List[Suppression]
+    rules_run: List[str]
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def to_json(self) -> Dict[str, object]:
+        return {
+            "ok": self.ok,
+            "rules": self.rules_run,
+            "suppressed": self.suppressed,
+            "unused_suppressions": [
+                dataclasses.asdict(s) for s in self.unused_suppressions
+            ],
+            "violations": [v.to_json() for v in self.violations],
+        }
+
+
+def run_analysis(
+    root,
+    *,
+    rules: Optional[Sequence[str]] = None,
+    baseline: Optional[Baseline] = None,
+    project: Optional[Project] = None,
+) -> AnalysisResult:
+    registry = all_rules()
+    names = list(rules) if rules else sorted(registry)
+    unknown = [n for n in names if n not in registry]
+    if unknown:
+        raise KeyError(f"unknown rule(s): {', '.join(unknown)}; "
+                       f"available: {', '.join(sorted(registry))}")
+    proj = project if project is not None else Project.load(root)
+    violations: List[Violation] = []
+    for n in names:
+        violations.extend(registry[n]().run(proj))
+    violations.sort()
+    if baseline is None:
+        return AnalysisResult(violations, 0, [], names)
+    kept = baseline.filter(violations)
+    return AnalysisResult(
+        kept, len(violations) - len(kept), baseline.unused(), names,
+    )

@@ -1,0 +1,190 @@
+"""Parsed-repo model shared by every analysis rule.
+
+A :class:`Project` holds the AST of every Python file in the scan roots plus
+the cheap cross-module indices the rules need for "interprocedural-lite"
+resolution: classes by name, per-module import aliases, and per-class
+attribute types inferred from constructor assignments.  Nothing here imports
+the analyzed code — analysis is purely syntactic (stdlib ``ast``).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Tuple
+
+# Directories (relative to the project root) whose files are *analyzed* —
+# i.e. rules report violations in them.  Everything else that is loaded
+# (tests/, scripts/) is only *consulted* as evidence (e.g. the kernel
+# coverage rule reads tests/test_kernels.py).
+DEFAULT_ANALYZED = ("src/repro", "benchmarks", "examples")
+# The analyzer itself talks about sinks/sources by name; don't self-flag.
+DEFAULT_EXCLUDED = ("src/repro/analysis",)
+DEFAULT_LOADED = ("src", "benchmarks", "examples", "tests")
+
+
+def dotted_path(node: ast.AST) -> Optional[Tuple[str, ...]]:
+    """``a.b.c`` -> ("a","b","c"); None for anything not a pure name chain."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return None
+
+
+@dataclasses.dataclass
+class Module:
+    path: str                       # project-root-relative, posix separators
+    tree: ast.Module
+    source: str
+
+    def __post_init__(self):
+        # import alias map: local name -> absolute dotted prefix
+        self.imports: Dict[str, Tuple[str, ...]] = {}
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    full = tuple(a.name.split("."))
+                    self.imports[a.asname or full[0]] = (
+                        full if a.asname else full[:1]
+                    )
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                base = tuple(node.module.split("."))
+                for a in node.names:
+                    if a.name == "*":
+                        continue
+                    self.imports[a.asname or a.name] = base + (a.name,)
+
+    def resolve(self, path: Tuple[str, ...]) -> Tuple[str, ...]:
+        """Expand the first segment of a dotted path through the imports."""
+        if path and path[0] in self.imports:
+            return self.imports[path[0]] + path[1:]
+        return path
+
+    def resolve_call(self, call: ast.Call) -> Optional[Tuple[str, ...]]:
+        p = dotted_path(call.func)
+        return self.resolve(p) if p else None
+
+
+def _toplevel_classes(tree: ast.Module) -> Iterable[ast.ClassDef]:
+    for node in tree.body:
+        if isinstance(node, ast.ClassDef):
+            yield node
+
+
+class Project:
+    """All parsed modules plus the cross-module lookup tables."""
+
+    def __init__(self, root: Path, modules: Dict[str, Module],
+                 analyzed: Tuple[str, ...] = DEFAULT_ANALYZED,
+                 excluded: Tuple[str, ...] = DEFAULT_EXCLUDED):
+        self.root = Path(root)
+        self.modules = modules
+        self._analyzed_prefixes = analyzed
+        self._excluded_prefixes = excluded
+        # class name -> (module, ClassDef).  Class names are effectively
+        # unique in this repo; on a collision the first definition wins and
+        # resolution just gets more conservative.
+        self.classes: Dict[str, Tuple[Module, ast.ClassDef]] = {}
+        for mod in modules.values():
+            for cls in _toplevel_classes(mod.tree):
+                self.classes.setdefault(cls.name, (mod, cls))
+
+    # -- construction ------------------------------------------------------
+
+    @classmethod
+    def load(cls, root, paths: Optional[Iterable[str]] = None,
+             analyzed: Tuple[str, ...] = DEFAULT_ANALYZED,
+             excluded: Tuple[str, ...] = DEFAULT_EXCLUDED) -> "Project":
+        root = Path(root)
+        rels: List[str] = []
+        if paths is not None:
+            rels = [str(p) for p in paths]
+        else:
+            for prefix in DEFAULT_LOADED:
+                base = root / prefix
+                if not base.is_dir():
+                    continue
+                for f in sorted(base.rglob("*.py")):
+                    rels.append(f.relative_to(root).as_posix())
+        modules: Dict[str, Module] = {}
+        for rel in rels:
+            f = root / rel
+            try:
+                src = f.read_text()
+                tree = ast.parse(src, filename=rel)
+            except (OSError, SyntaxError):
+                continue
+            modules[rel] = Module(path=rel, tree=tree, source=src)
+        return cls(root, modules, analyzed=analyzed, excluded=excluded)
+
+    # -- queries -----------------------------------------------------------
+
+    def is_analyzed(self, path: str) -> bool:
+        if any(path.startswith(e) for e in self._excluded_prefixes):
+            return False
+        return any(path.startswith(a) for a in self._analyzed_prefixes)
+
+    def analyzed_modules(self) -> List[Module]:
+        return [m for p, m in sorted(self.modules.items())
+                if self.is_analyzed(p)]
+
+    def module(self, path: str) -> Optional[Module]:
+        return self.modules.get(path)
+
+    def class_method(self, cls_name: str,
+                     meth: str) -> Optional[Tuple[Module, ast.FunctionDef]]:
+        got = self.classes.get(cls_name)
+        if got is None:
+            return None
+        mod, cls = got
+        for node in cls.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node.name == meth:
+                return mod, node
+        return None
+
+    def class_bases(self, cls_name: str) -> Tuple[str, ...]:
+        """Transitive base-class names resolvable inside the project."""
+        out: List[str] = []
+        seen = set()
+        stack = [cls_name]
+        while stack:
+            name = stack.pop()
+            got = self.classes.get(name)
+            if got is None:
+                continue
+            for b in got[1].bases:
+                p = dotted_path(b)
+                if not p:
+                    continue
+                base = p[-1]
+                if base not in seen:
+                    seen.add(base)
+                    out.append(base)
+                    stack.append(base)
+        return tuple(out)
+
+    def attr_types(self, cls_name: str) -> Dict[str, str]:
+        """``self.x = SomeClass(...)`` assignments anywhere in the class."""
+        got = self.classes.get(cls_name)
+        if got is None:
+            return {}
+        mod, cls = got
+        types: Dict[str, str] = {}
+        for node in ast.walk(cls):
+            if not isinstance(node, ast.Assign):
+                continue
+            if not isinstance(node.value, ast.Call):
+                continue
+            callee = dotted_path(node.value.func)
+            if not callee or callee[-1] not in self.classes:
+                continue
+            for tgt in node.targets:
+                p = dotted_path(tgt)
+                if p and len(p) == 2 and p[0] == "self":
+                    types[p[1]] = callee[-1]
+        return types

@@ -1,0 +1,2 @@
+"""Rule modules — importing this package registers every rule."""
+from repro.analysis.rules import coverage, custody, donation, purity  # noqa: F401

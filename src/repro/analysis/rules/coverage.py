@@ -1,0 +1,219 @@
+"""Coverage rules: conventions the repo relies on, promoted to checks.
+
+kernel-parity-coverage — every public kernel exported from
+``kernels/ops.py`` (defs AND public assignments like ``dequantize_int8 =
+_deq``) must have a ``<name>_ref`` oracle in ``kernels/ref.py`` and a parity
+test in ``tests/test_kernels.py`` that references BOTH ``ops.<name>`` and
+``R.<name>_ref`` — an op whose oracle exists but is never compared against
+is unverified.
+
+sharding-rule-coverage — every logical axis name used in ``models/`` param
+declarations (``builder.param(name, shape, axes)``), activation constraints
+(``wlc(x, "batch", ...)``) and ``cache_logical_axes`` tables must appear in
+the ``distributed/sharding.py`` rule tables (the ``make_rules`` dict literal
+or a ``rules.setdefault(...)`` amendment) — an unlisted axis silently
+replicates its tensor.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.core import Rule, Violation, register
+from repro.analysis.project import Module, Project, dotted_path
+
+OPS_PATH = "src/repro/kernels/ops.py"
+REF_PATH = "src/repro/kernels/ref.py"
+KERNEL_TESTS_PATH = "tests/test_kernels.py"
+SHARDING_PATH = "src/repro/distributed/sharding.py"
+MODELS_PREFIX = "src/repro/models/"
+
+
+def _public_exports(mod: Module) -> List[Tuple[str, int]]:
+    out: List[Tuple[str, int]] = []
+    for node in mod.tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if not node.name.startswith("_"):
+                out.append((node.name, node.lineno))
+        elif isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            name = node.targets[0].id
+            if name.startswith("_") or not name.islower():
+                continue  # _private / CONSTANTS / TypeAliases
+            if isinstance(node.value, ast.Constant):
+                continue
+            out.append((name, node.lineno))
+    return out
+
+
+def _toplevel_names(mod: Module) -> Set[str]:
+    names: Set[str] = set()
+    for node in mod.tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            names.add(node.name)
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    names.add(t.id)
+    return names
+
+
+def _referenced_attrs(mod: Module) -> Set[Tuple[str, str]]:
+    """Every ``base.attr`` reference in a module, as (base, attr) pairs."""
+    out: Set[Tuple[str, str]] = set()
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Attribute):
+            p = dotted_path(node)
+            if p and len(p) >= 2:
+                out.add((p[0], p[-1]))
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Name):
+            out.add(("", node.id))
+    return out
+
+
+@register
+class KernelParityCoverage(Rule):
+    name = "kernel-parity-coverage"
+    description = (
+        "every public kernel in kernels/ops.py needs a *_ref oracle in "
+        "kernels/ref.py and a parity test in tests/test_kernels.py that "
+        "references both ops.<name> and <name>_ref"
+    )
+
+    def run(self, project: Project) -> List[Violation]:
+        ops = project.module(OPS_PATH)
+        if ops is None:
+            return []
+        ref = project.module(REF_PATH)
+        tests = project.module(KERNEL_TESTS_PATH)
+        ref_names = _toplevel_names(ref) if ref else set()
+        test_refs = _referenced_attrs(tests) if tests else set()
+
+        def referenced(attr: str) -> bool:
+            return any(a == attr for _, a in test_refs)
+
+        out: List[Violation] = []
+        for name, line in _public_exports(ops):
+            oracle = f"{name}_ref"
+            if oracle not in ref_names:
+                out.append(Violation(
+                    path=OPS_PATH, line=line, rule=self.name,
+                    message=(f"public kernel '{name}' has no '{oracle}' "
+                             f"oracle in kernels/ref.py"),
+                    symbol=name))
+                continue
+            if not referenced(name):
+                out.append(Violation(
+                    path=OPS_PATH, line=line, rule=self.name,
+                    message=(f"public kernel '{name}' is never exercised in "
+                             f"tests/test_kernels.py (no ops.{name} "
+                             f"reference)"),
+                    symbol=name))
+            elif not referenced(oracle):
+                out.append(Violation(
+                    path=OPS_PATH, line=line, rule=self.name,
+                    message=(f"tests/test_kernels.py never compares "
+                             f"'{name}' against its oracle '{oracle}' — "
+                             f"the op is exercised but unverified"),
+                    symbol=name))
+        return out
+
+
+def _const_strs(node: ast.AST) -> Set[str]:
+    return {n.value for n in ast.walk(node)
+            if isinstance(n, ast.Constant) and isinstance(n.value, str)}
+
+
+def _axes_used(mod: Module) -> Dict[str, int]:
+    """logical axis name -> first use line, from one models/ module."""
+    used: Dict[str, int] = {}
+
+    def note(names: Set[str], line: int) -> None:
+        for n in names:
+            used.setdefault(n, line)
+
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        p = dotted_path(node.func)
+        if p is None:
+            continue
+        if p[-1] == "param":
+            # builder.param(name, shape, axes, ...): axes is arg 2 or kw
+            if len(node.args) >= 3:
+                note(_const_strs(node.args[2]), node.lineno)
+            for kw in node.keywords:
+                if kw.arg == "axes":
+                    note(_const_strs(kw.value), node.lineno)
+        elif p[-1] in ("wlc", "with_logical_constraint"):
+            for a in node.args[1:]:
+                note(_const_strs(a), node.lineno)
+    # cache_logical_axes tables: every all-string/None tuple inside
+    for node in ast.walk(mod.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and node.name == "cache_logical_axes":
+            for t in ast.walk(node):
+                if isinstance(t, ast.Tuple) and t.elts and all(
+                        isinstance(e, ast.Constant)
+                        and (e.value is None or isinstance(e.value, str))
+                        for e in t.elts):
+                    note(_const_strs(t), t.lineno)
+    return used
+
+
+def _rule_keys(project: Project) -> Set[str]:
+    keys: Set[str] = set()
+    sharding = project.module(SHARDING_PATH)
+    if sharding is not None:
+        for node in ast.walk(sharding.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node.name == "make_rules":
+                for d in ast.walk(node):
+                    if isinstance(d, ast.Dict):
+                        for k in d.keys:
+                            if isinstance(k, ast.Constant) \
+                                    and isinstance(k.value, str):
+                                keys.add(k.value)
+    # rule-table amendments anywhere: rules.setdefault("seq_data", ...)
+    for mod in project.modules.values():
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "setdefault":
+                recv = dotted_path(node.func.value)
+                if recv and "rule" in recv[-1] and node.args \
+                        and isinstance(node.args[0], ast.Constant) \
+                        and isinstance(node.args[0].value, str):
+                    keys.add(node.args[0].value)
+    return keys
+
+
+@register
+class ShardingRuleCoverage(Rule):
+    name = "sharding-rule-coverage"
+    description = (
+        "every logical axis name used in models/ param declarations and "
+        "activation constraints must appear in the distributed/sharding.py "
+        "rule tables (unlisted axes silently replicate)"
+    )
+
+    def run(self, project: Project) -> List[Violation]:
+        keys = _rule_keys(project)
+        if not keys:
+            return []  # synthetic projects without a rule table
+        out: List[Violation] = []
+        for path, mod in sorted(project.modules.items()):
+            if not path.startswith(MODELS_PREFIX):
+                continue
+            for axis, line in sorted(_axes_used(mod).items()):
+                if axis not in keys:
+                    out.append(Violation(
+                        path=path, line=line, rule=self.name,
+                        message=(f"logical axis '{axis}' is used here but "
+                                 f"missing from the make_rules table in "
+                                 f"distributed/sharding.py — tensors on it "
+                                 f"silently replicate"),
+                        symbol=axis))
+        return out

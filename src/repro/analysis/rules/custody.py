@@ -1,0 +1,494 @@
+"""custody-taint: private-shard bytes must never reach a serialization /
+network / checkpoint sink, and may only cross the host->device feed boundary
+under a transfer guard (or with a CustodyEvent audit trail in scope).
+
+STANNIS's core promise — private data never leaves the storage device — is
+enforced at runtime by ``PermissionError`` guards that only fire on executed
+paths.  This rule proves the complement statically: any value *derived from a
+custody-guarded device read* (``device.read(...)``, ``device.assemble(...)``,
+``device._materialize(...)``) is tainted, taint propagates through
+assignments, containers, arithmetic, and method returns
+(interprocedural-lite: one global summary pass marks methods like
+``FleetBatcher.next_batch`` as taint-returning), and tainted values must not
+reach:
+
+  * serialization sinks — ``pickle/json/marshal.dump(s)``, ``np.save*``,
+    ``.tofile(...)``, ``open(...)'d file .write(...)``;
+  * network sinks — ``.send/.sendall/.post/.put`` method calls,
+    ``socket.*``;
+  * checkpoint sinks — ``.save(...)`` on a receiver whose name or
+    constructor type mentions checkpoints (``ckpt.save``,
+    ``CheckpointManager(...)``), ``save_checkpoint(...)``;
+  * the feed boundary — ``.feed(...)`` / ``.feed_addressable(...)`` /
+    ``jax.device_put(...)`` — UNLESS (a) the call is lexically inside a
+    ``with jax.transfer_guard*`` block, (b) the resolved callee's own body
+    establishes the guard (``MeshFeeder.feed_addressable`` does), or (c) the
+    calling scope logs a ``CustodyEvent`` / appends to a custody log.
+
+A guarded feed *sanitizes*: its result is the sanctioned on-device batch.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.core import Rule, Violation, register
+from repro.analysis.project import Module, Project, dotted_path
+from repro.analysis.scopes import Scope, function_scopes, is_prefix
+
+Path_ = Tuple[str, ...]
+
+DEVICE_BASES = {"BaseStorageDevice", "StorageDevice"}
+SOURCE_METHODS = {"read", "assemble", "_materialize"}
+SERIALIZE_FUNCS = {
+    ("pickle", "dump"), ("pickle", "dumps"),
+    ("json", "dump"), ("json", "dumps"),
+    ("marshal", "dump"), ("marshal", "dumps"),
+    ("numpy", "save"), ("numpy", "savez"), ("numpy", "savez_compressed"),
+}
+NETWORK_METHODS = {"send", "sendall", "send_bytes", "post"}
+FEED_METHODS = {"feed", "feed_addressable"}
+CHECKPOINT_NAME_HINTS = ("ckpt", "checkpoint")
+
+
+def _is_device_class(project: Project, name: Optional[str]) -> bool:
+    if name is None:
+        return False
+    if name in DEVICE_BASES:
+        return True
+    return any(b in DEVICE_BASES for b in project.class_bases(name))
+
+
+def _with_has_guard(withs) -> bool:
+    for w in withs:
+        for item in w.items:
+            expr = item.context_expr
+            call = expr if isinstance(expr, ast.Call) else None
+            p = dotted_path(call.func if call else expr)
+            if p and any("transfer_guard" in seg for seg in p):
+                return True
+    return False
+
+
+def _feedish(name: str) -> bool:
+    """Method names worth following when hunting for a transfer guard —
+    the feed methods themselves plus wrappers like ``to_device_batch``."""
+    return name in FEED_METHODS or "feed" in name or "device" in name
+
+
+def _body_has_guard(project: Project, node: ast.AST, depth: int = 2) -> bool:
+    """Does this function body establish a transfer guard — directly, via a
+    self-call, or via a feed-ish helper (``to_device_batch`` ->
+    ``feed_addressable``)?"""
+    for n in ast.walk(node):
+        if isinstance(n, ast.With):
+            if _with_has_guard((n,)):
+                return True
+    if depth <= 0:
+        return False
+    for n in ast.walk(node):
+        if isinstance(n, ast.Call):
+            p = dotted_path(n.func)
+            if not p:
+                continue
+            target = None
+            if len(p) == 2 and p[0] == "self":
+                target = _find_any_method(project, p[1])
+            elif _feedish(p[-1]):
+                target = _find_any_method(project, p[-1])
+            if target is not None and _body_has_guard(
+                    project, target, depth - 1):
+                return True
+    return False
+
+
+def _find_any_method(project: Project, name: str) -> Optional[ast.AST]:
+    for cls_name in project.classes:
+        got = project.class_method(cls_name, name)
+        if got is not None:
+            return got[1]
+    return None
+
+
+def _scope_logs_custody(scope: Scope) -> bool:
+    for info in scope.stmts:
+        for call in info.calls:
+            p = dotted_path(call.func)
+            if p is None:
+                continue
+            if p[-1] == "CustodyEvent":
+                return True
+            if p[-1] == "append" and len(p) >= 2 and "custody" in p[-2]:
+                return True
+    return False
+
+
+class _Tainter:
+    """Statement-ordered taint propagation for one function scope."""
+
+    def __init__(self, project: Project, mod: Module, scope: Scope,
+                 taint_returning: Set[Tuple[str, str]],
+                 tainted_attrs: Set[Path_]):
+        self.project = project
+        self.mod = mod
+        self.scope = scope
+        self.taint_returning = taint_returning
+        self.tainted: Set[Path_] = set(tainted_attrs)
+        self.local_types: Dict[str, str] = {}
+        self.open_files: Set[str] = set()
+        self._withs: Tuple[ast.With, ...] = ()
+        args = getattr(scope.node, "args", None)
+        if args is not None:
+            for a in list(args.posonlyargs) + list(args.args) \
+                    + list(args.kwonlyargs):
+                t = self._ann_class(a.annotation)
+                if t:
+                    self.local_types[a.arg] = t
+        if scope.class_name and _is_device_class(project, scope.class_name):
+            self.local_types["self"] = scope.class_name
+
+    def _ann_class(self, ann) -> Optional[str]:
+        if ann is None:
+            return None
+        if isinstance(ann, ast.Constant) and isinstance(ann.value, str):
+            name = ann.value.split(".")[-1].split("[")[0]
+        else:
+            p = dotted_path(ann)
+            name = p[-1] if p else None
+        if name and (name in self.project.classes or name in DEVICE_BASES):
+            return name
+        return None
+
+    # -- classification ----------------------------------------------------
+
+    def _recv_type(self, recv: Path_) -> Optional[str]:
+        if len(recv) == 1:
+            return self.local_types.get(recv[0])
+        if recv[0] == "self" and len(recv) == 2 and self.scope.class_name:
+            return self.project.attr_types(self.scope.class_name).get(recv[1])
+        return None
+
+    def is_source_call(self, call: ast.Call) -> bool:
+        p = dotted_path(call.func)
+        if p is None or len(p) < 2:
+            return False
+        recv, meth = p[:-1], p[-1]
+        if meth not in SOURCE_METHODS:
+            return False
+        # device-typed receiver, `self` inside a device class, a name that
+        # smells like a device, or the result of `.device(...)`
+        t = self._recv_type(recv)
+        if _is_device_class(self.project, t):
+            return True
+        if recv[-1] in ("device", "dev") or "device" in recv[-1]:
+            return True
+        return False
+
+    def is_sanitizing_call(self, call: ast.Call) -> bool:
+        """A guarded feed sanitizes: its result is the sanctioned on-device
+        batch, so taint dies at the boundary instead of contaminating every
+        downstream loss scalar and trained parameter.  Guarded means the call
+        is lexically under ``with jax.transfer_guard*``, or the resolved
+        callee's own body establishes the guard (``MeshFeeder.
+        feed_addressable`` does), transitively through feed-ish wrappers
+        (``to_device_batch``, ``next_device_batch``)."""
+        p = dotted_path(call.func)
+        resolved = self.mod.resolve(p) if p else None
+        is_feed = bool(p and p[-1] in FEED_METHODS)
+        is_dput = bool(
+            resolved and tuple(resolved[-2:]) == ("jax", "device_put"))
+        if is_feed or is_dput:
+            if _with_has_guard(self._withs):
+                return True
+            if is_feed:
+                target = _find_any_method(self.project, p[-1])
+                return target is not None and _body_has_guard(
+                    self.project, target)
+            return False
+        if p and _feedish(p[-1]):
+            target = _find_any_method(self.project, p[-1])
+            if target is None:
+                target = self._local_func(p[-1])
+            return target is not None and _body_has_guard(
+                self.project, target)
+        return False
+
+    def _local_func(self, name: str) -> Optional[ast.AST]:
+        for node in self.mod.tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node.name == name:
+                return node
+        return None
+
+    def call_taints(self, call: ast.Call) -> bool:
+        if self.is_sanitizing_call(call):
+            return False
+        if self.is_source_call(call):
+            return True
+        p = dotted_path(call.func)
+        if p is not None and self._summary_taints(p):
+            return True
+        # X.read/.assemble where X itself is a call (fleet.device(w).read)
+        if isinstance(call.func, ast.Attribute) \
+                and call.func.attr in SOURCE_METHODS \
+                and isinstance(call.func.value, ast.Call):
+            inner = dotted_path(call.func.value.func)
+            if inner and inner[-1] == "device":
+                return True
+        # any call with a tainted argument conservatively returns taint
+        for a in list(call.args) + [kw.value for kw in call.keywords]:
+            if self.expr_tainted(a):
+                return True
+        return False
+
+    def _summary_taints(self, p: Path_) -> bool:
+        """Does the (owner, name)-keyed summary mark this call
+        taint-returning?  Bare calls match module-level functions (owner
+        ``""``); method calls match the receiver's resolved class and its
+        bases when known, else fall back to any same-named METHOD — a
+        module-level ``run()`` that returns taint must not poison every
+        ``obj.run()`` in the repo."""
+        name = p[-1]
+        if len(p) == 1:
+            return ("", name) in self.taint_returning
+        t = self._recv_type(p[:-1])
+        if t is not None:
+            owners = {t, *self.project.class_bases(t)}
+            return any((o, name) in self.taint_returning for o in owners)
+        return any(owner and n == name for owner, n in self.taint_returning)
+
+    def expr_tainted(self, expr: Optional[ast.AST]) -> bool:
+        if expr is None:
+            return False
+        if isinstance(expr, ast.Call):
+            if self.is_sanitizing_call(expr):
+                return False  # taint dies at the guarded feed boundary
+            if self.call_taints(expr):
+                return True
+            return any(self.expr_tainted(c)
+                       for c in ast.iter_child_nodes(expr))
+        if isinstance(expr, (ast.Name, ast.Attribute)):
+            path = dotted_path(expr)
+            if path is not None:  # a maximal load chain — don't descend
+                return any(is_prefix(t, path) or is_prefix(path, t)
+                           for t in self.tainted)
+        return any(self.expr_tainted(c) for c in ast.iter_child_nodes(expr))
+
+    # -- propagation -------------------------------------------------------
+
+    def propagate(self, info) -> None:
+        self._withs = info.withs
+        node = info.node
+        if isinstance(node, ast.Assign):
+            self._assign(node.targets, node.value)
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            self._assign([node.target], node.value)
+        elif isinstance(node, ast.AugAssign):
+            if self.expr_tainted(node.value):
+                p = dotted_path(node.target)
+                if p:
+                    self.tainted.add(p)
+        elif isinstance(node, ast.For):
+            if self.expr_tainted(node.iter):
+                for p in [dotted_path(node.target)] if dotted_path(
+                        node.target) else []:
+                    self.tainted.add(p)
+                if isinstance(node.target, (ast.Tuple, ast.List)):
+                    for el in node.target.elts:
+                        p = dotted_path(el)
+                        if p:
+                            self.tainted.add(p)
+        elif isinstance(node, ast.With):
+            for item in node.items:
+                if item.optional_vars is None:
+                    continue
+                p = dotted_path(item.optional_vars)
+                if p is None:
+                    continue
+                cp = dotted_path(item.context_expr.func) if isinstance(
+                    item.context_expr, ast.Call) else None
+                if cp and cp[-1] == "open":
+                    self.open_files.add(p[0])
+                if self.expr_tainted(item.context_expr):
+                    self.tainted.add(p)
+
+    def _assign(self, targets, value) -> None:
+        # type tracking: x = SomeClass(...) / f = open(...)
+        if isinstance(value, ast.Call):
+            callee = dotted_path(value.func)
+            if callee and len(targets) == 1:
+                tp = dotted_path(targets[0])
+                if tp and len(tp) == 1:
+                    if callee[-1] in self.project.classes:
+                        self.local_types[tp[0]] = callee[-1]
+                    if callee[-1] == "open":
+                        self.open_files.add(tp[0])
+        value_tainted = self.expr_tainted(value)
+        for tgt in targets:
+            self._taint_target(tgt, value_tainted)
+
+    def _taint_target(self, tgt, value_tainted: bool) -> None:
+        if isinstance(tgt, (ast.Tuple, ast.List)):
+            for el in tgt.elts:
+                self._taint_target(el, value_tainted)
+            return
+        if isinstance(tgt, ast.Starred):
+            self._taint_target(tgt.value, value_tainted)
+            return
+        if isinstance(tgt, ast.Subscript):
+            base = dotted_path(tgt.value)
+            if base and value_tainted:
+                self.tainted.add(base)  # out[r] = device.read(...) taints out
+            return
+        p = dotted_path(tgt)
+        if p is None:
+            return
+        if value_tainted:
+            self.tainted.add(p)
+        else:
+            self.tainted.discard(p)
+
+
+def _method_summaries(
+    project: Project,
+) -> Tuple[Set[Tuple[str, str]], Dict[str, Set[Path_]]]:
+    """((owner class or "", name) pairs whose return value is tainted,
+        class name -> tainted ``self.x`` attribute paths)."""
+    taint_returning: Set[Tuple[str, str]] = set()
+    tainted_attrs: Dict[str, Set[Path_]] = {}
+    for _round in range(2):  # 2 passes reach a fixpoint for 1-deep chains
+        for mod in project.modules.values():
+            if not project.is_analyzed(mod.path):
+                continue
+            for scope in function_scopes(mod.tree):
+                attrs = tainted_attrs.get(scope.class_name or "", set())
+                t = _Tainter(project, mod, scope, taint_returning, attrs)
+                returns_taint = False
+                for info in scope.stmts:
+                    t.propagate(info)
+                    if isinstance(info.node, ast.Return) \
+                            and t.expr_tainted(info.node.value):
+                        returns_taint = True
+                if returns_taint:
+                    taint_returning.add(
+                        (scope.class_name or "", scope.node.name))
+                if scope.class_name:
+                    new_attrs = {p for p in t.tainted
+                                 if len(p) >= 2 and p[0] == "self"}
+                    if new_attrs:
+                        tainted_attrs.setdefault(
+                            scope.class_name, set()).update(new_attrs)
+    return taint_returning, tainted_attrs
+
+
+@register
+class CustodyTaint(Rule):
+    name = "custody-taint"
+    description = (
+        "values derived from StorageDevice custody reads must not reach "
+        "serialization/network/checkpoint sinks, and may cross the "
+        "feed/device_put boundary only under a transfer guard (or with a "
+        "CustodyEvent audit in scope)"
+    )
+
+    def run(self, project: Project) -> List[Violation]:
+        taint_returning, tainted_attrs = _method_summaries(project)
+        out: List[Violation] = []
+        for mod in project.analyzed_modules():
+            for scope in function_scopes(mod.tree):
+                out.extend(self._check_scope(
+                    project, mod, scope, taint_returning,
+                    tainted_attrs.get(scope.class_name or "", set())))
+        return out
+
+    def _check_scope(self, project: Project, mod: Module, scope: Scope,
+                     taint_returning: Set[str],
+                     tainted_attrs: Set[Path_]) -> List[Violation]:
+        t = _Tainter(project, mod, scope, taint_returning, tainted_attrs)
+        logs_custody = _scope_logs_custody(scope)
+        out: List[Violation] = []
+        for info in scope.stmts:
+            t._withs = info.withs
+            for call in info.calls:
+                v = self._check_call(project, mod, scope, t, info, call,
+                                     logs_custody)
+                if v is not None:
+                    out.append(v)
+            t.propagate(info)
+        return out
+
+    def _check_call(self, project: Project, mod: Module, scope: Scope,
+                    t: _Tainter, info, call: ast.Call,
+                    logs_custody: bool) -> Optional[Violation]:
+        p = dotted_path(call.func)
+        resolved = mod.resolve(p) if p else None
+        argexprs = list(call.args) + [kw.value for kw in call.keywords]
+        tainted_arg = any(t.expr_tainted(a) for a in argexprs)
+        if not tainted_arg:
+            return None
+
+        # -- serialization sinks ------------------------------------------
+        if resolved and (tuple(resolved[-2:]) in SERIALIZE_FUNCS
+                         or tuple(resolved[:1]) == ("socket",)):
+            return self.violation(
+                mod.path, call,
+                f"custody-tainted value reaches serialization/network sink "
+                f"'{'.'.join(p)}' — private shard bytes must never be "
+                f"persisted or sent off-device",
+                symbol=scope.qualname)
+        if p and p[-1] == "tofile":
+            return self.violation(
+                mod.path, call,
+                "custody-tainted array written to disk via .tofile()",
+                symbol=scope.qualname)
+        if p and p[-1] in NETWORK_METHODS and len(p) >= 2:
+            return self.violation(
+                mod.path, call,
+                f"custody-tainted value sent through '{'.'.join(p)}'",
+                symbol=scope.qualname)
+        if p and p[-1] == "write" and len(p) >= 2 \
+                and p[0] in t.open_files:
+            return self.violation(
+                mod.path, call,
+                "custody-tainted value written to an open()'d file",
+                symbol=scope.qualname)
+
+        # -- checkpoint sinks ---------------------------------------------
+        if p and p[-1] in ("save", "save_checkpoint", "write_checkpoint"):
+            recv = p[:-1]
+            recv_type = t._recv_type(recv) if recv else None
+            hinted = (
+                p[-1] != "save"
+                or (recv and any(h in recv[-1].lower()
+                                 for h in CHECKPOINT_NAME_HINTS))
+                or (recv_type and "checkpoint" in recv_type.lower())
+            )
+            if hinted:
+                return self.violation(
+                    mod.path, call,
+                    f"custody-tainted value reaches checkpoint sink "
+                    f"'{'.'.join(p)}' — private shard bytes must not be "
+                    f"checkpointed",
+                    symbol=scope.qualname)
+
+        # -- the feed boundary --------------------------------------------
+        is_feed = bool(p and p[-1] in FEED_METHODS)
+        is_device_put = bool(
+            resolved and tuple(resolved[-2:]) == ("jax", "device_put"))
+        if is_feed or is_device_put:
+            if _with_has_guard(info.withs):
+                return None
+            if is_feed:
+                target = _find_any_method(project, p[-1])
+                if target is not None and _body_has_guard(project, target):
+                    return None
+            if logs_custody:
+                return None
+            what = "jax.device_put" if is_device_put else "." + p[-1] + "()"
+            return self.violation(
+                mod.path, call,
+                f"custody-tainted batch crosses the host->device boundary "
+                f"via {what} without a transfer_guard context or a "
+                f"CustodyEvent audit in scope",
+                symbol=scope.qualname)
+        return None

@@ -1,0 +1,253 @@
+"""use-after-donate: a buffer passed at a ``donate_argnums`` position of a
+jitted callable is dead after the call — XLA may alias its memory to an
+output — so reading it afterwards in the same scope is a latent
+use-of-freed-buffer bug (it "works" on CPU today and corrupts on TPU).
+
+Resolution is interprocedural-lite:
+
+  * ``f = jax.jit(fn, donate_argnums=...)`` — local and module names;
+  * ``self.decode = jax.jit(..., donate_argnums=(2,))`` — class attributes
+    (``serve/runner.py`` style), reached through ``self.decode(...)``,
+    ``obj.decode(...)`` where ``obj = StepRunner(...)``, and
+    ``self.runner.decode(...)`` via constructor-assigned attribute types;
+  * ``CompiledStep(step_fn=jitted, ...)`` — jitted callables stored into
+    constructor keywords, reached through return-annotated accessors
+    (``compiled = self.compile()  # -> CompiledStep``).
+
+A call whose result rebinds the donated path in the same statement
+(``tok, _, cache = self._serve(params, tok, cache, pos)``) is the sanctioned
+idiom.  ``jax.jit(...).lower(...)`` never *executes* the program, so AOT
+lowering chains are exempt.  Donating inside a loop without rebinding the
+donated name anywhere in the loop body is flagged even without a later read:
+the next iteration feeds the donated buffer back in.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.core import Rule, Violation, register
+from repro.analysis.project import Module, Project, dotted_path
+from repro.analysis.scopes import Scope, function_scopes, is_prefix
+
+Path_ = Tuple[str, ...]
+
+
+def _donate_positions(module: Module, call: ast.Call) -> Optional[Tuple[int, ...]]:
+    """donate_argnums of a ``jax.jit(...)`` call, or None if not one."""
+    resolved = module.resolve_call(call)
+    if not resolved or resolved[-2:] != ("jax", "jit"):
+        return None
+    for kw in call.keywords:
+        if kw.arg != "donate_argnums":
+            continue
+        v = kw.value
+        if isinstance(v, ast.Constant) and isinstance(v.value, int):
+            return (v.value,)
+        if isinstance(v, (ast.Tuple, ast.List)):
+            got = []
+            for el in v.elts:
+                if isinstance(el, ast.Constant) and isinstance(el.value, int):
+                    got.append(el.value)
+            return tuple(got) if got else None
+    return None
+
+
+def _annotation_class(project: Project, ann: Optional[ast.AST]) -> Optional[str]:
+    if ann is None:
+        return None
+    if isinstance(ann, ast.Constant) and isinstance(ann.value, str):
+        name = ann.value.split(".")[-1].split("[")[0]
+    else:
+        p = dotted_path(ann)
+        name = p[-1] if p else None
+    return name if name and name in project.classes else None
+
+
+class _DonationIndex:
+    """Which (class, attr) / local names are donating callables."""
+
+    def __init__(self, project: Project):
+        self.project = project
+        # (class name, attr) -> donated positions
+        self.class_attrs: Dict[Tuple[str, str], Tuple[int, ...]] = {}
+        # class name -> {attr: class-name-of-value}  (constructor types)
+        self.attr_types: Dict[str, Dict[str, str]] = {}
+        # (class name, method) -> return-annotation class
+        self.returns: Dict[Tuple[Optional[str], str], str] = {}
+        for mod in project.modules.values():
+            for scope in function_scopes(mod.tree):
+                fn = scope.node
+                ret = _annotation_class(project, getattr(fn, "returns", None))
+                if ret:
+                    self.returns[(scope.class_name, fn.name)] = ret
+                self._scan_scope(mod, scope)
+        for name in project.classes:
+            self.attr_types[name] = project.attr_types(name)
+
+    def _scan_scope(self, mod: Module, scope: Scope) -> None:
+        local_jit: Dict[str, Tuple[int, ...]] = {}
+        for info in scope.stmts:
+            node = info.node
+            if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+                pos = _donate_positions(mod, node.value)
+                for tgt in node.targets:
+                    p = dotted_path(tgt)
+                    if p is None:
+                        continue
+                    if pos is not None:
+                        if len(p) == 1:
+                            local_jit[p[0]] = pos
+                        elif len(p) == 2 and p[0] == "self" and scope.class_name:
+                            self.class_attrs[(scope.class_name, p[1])] = pos
+            # jitted locals stored into constructor keywords:
+            #   CompiledStep(step_fn=step_fn, ...)
+            for call in info.calls:
+                callee = dotted_path(call.func)
+                if not callee or callee[-1] not in self.project.classes:
+                    continue
+                for kw in call.keywords:
+                    if kw.arg is None:
+                        continue
+                    pos = None
+                    if isinstance(kw.value, ast.Call):
+                        pos = _donate_positions(mod, kw.value)
+                    elif isinstance(kw.value, ast.Name):
+                        pos = local_jit.get(kw.value.id)
+                    if pos is not None:
+                        self.class_attrs[(callee[-1], kw.arg)] = pos
+
+
+@register
+class UseAfterDonate(Rule):
+    name = "use-after-donate"
+    description = (
+        "a buffer passed at a donate_argnums position of a jitted call must "
+        "not be read again in the same scope (rebind it from the call's "
+        "result); .lower() AOT chains are exempt"
+    )
+
+    def run(self, project: Project) -> List[Violation]:
+        index = _DonationIndex(project)
+        out: List[Violation] = []
+        for mod in project.analyzed_modules():
+            for scope in function_scopes(mod.tree):
+                out.extend(self._check_scope(project, index, mod, scope))
+        return out
+
+    # -- per-scope ---------------------------------------------------------
+
+    def _check_scope(self, project: Project, index: _DonationIndex,
+                     mod: Module, scope: Scope) -> List[Violation]:
+        local_jit: Dict[str, Tuple[int, ...]] = {}
+        local_types: Dict[str, str] = {}
+        # parameter annotations give local types too
+        args = getattr(scope.node, "args", None)
+        if args is not None:
+            for a in list(args.posonlyargs) + list(args.args) + list(args.kwonlyargs):
+                t = _annotation_class(project, a.annotation)
+                if t:
+                    local_types[a.arg] = t
+
+        def callee_positions(call: ast.Call) -> Optional[Tuple[int, ...]]:
+            func = call.func
+            # jax.jit(f, donate_argnums=...)(args) — immediate invocation
+            if isinstance(func, ast.Call):
+                return _donate_positions(mod, func)
+            if isinstance(func, ast.Name):
+                return local_jit.get(func.id)
+            if isinstance(func, ast.Attribute):
+                # AOT: jax.jit(...).lower(...) never executes the program
+                if func.attr == "lower" and isinstance(func.value, ast.Call) \
+                        and _donate_positions(mod, func.value) is not None:
+                    return None
+                p = dotted_path(func)
+                if p is None:
+                    return None
+                recv, attr = p[:-1], p[-1]
+                cls = None
+                if recv == ("self",):
+                    cls = scope.class_name
+                elif len(recv) == 1:
+                    cls = local_types.get(recv[0])
+                elif len(recv) == 2 and recv[0] == "self" and scope.class_name:
+                    cls = index.attr_types.get(scope.class_name, {}).get(recv[1])
+                if cls is None:
+                    return None
+                return index.class_attrs.get((cls, attr))
+            return None
+
+        stmts = scope.stmts
+        out: List[Violation] = []
+        for info in stmts:
+            node = info.node
+            # track `f = jax.jit(...)` and `x = Cls(...)` / annotated returns
+            if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+                pos = _donate_positions(mod, node.value)
+                callee = dotted_path(node.value.func)
+                tgt0 = dotted_path(node.targets[0]) if len(node.targets) == 1 \
+                    else None
+                if tgt0 and len(tgt0) == 1:
+                    if pos is not None:
+                        local_jit[tgt0[0]] = pos
+                    elif callee and callee[-1] in project.classes:
+                        local_types[tgt0[0]] = callee[-1]
+                    elif callee and len(callee) >= 2:
+                        # x = self.compile()  ->  return annotation
+                        recv = callee[:-1]
+                        rcls = scope.class_name if recv == ("self",) \
+                            else local_types.get(recv[0]) if len(recv) == 1 \
+                            else None
+                        ret = index.returns.get((rcls, callee[-1])) \
+                            if rcls else None
+                        if ret:
+                            local_types[tgt0[0]] = ret
+
+            for call in info.calls:
+                positions = callee_positions(call)
+                if not positions:
+                    continue
+                for argnum in positions:
+                    if argnum >= len(call.args):
+                        continue
+                    donated = dotted_path(call.args[argnum])
+                    if donated is None:
+                        continue  # fresh expression — nothing aliases it
+                    out.extend(self._check_donation(
+                        mod, scope, stmts, info, call, donated))
+        return out
+
+    def _check_donation(self, mod: Module, scope: Scope,
+                        stmts, info, call: ast.Call,
+                        donated: Path_) -> List[Violation]:
+        rebinds_here = any(is_prefix(s, donated) for s in info.stores)
+        if rebinds_here:
+            return []
+        out: List[Violation] = []
+        if info.loops:
+            loop = info.loops[-1]
+            in_loop = [s for s in stmts if loop in s.loops]
+            if not any(is_prefix(st, donated)
+                       for s in in_loop for st in s.stores):
+                out.append(self.violation(
+                    mod.path, call,
+                    f"'{'.'.join(donated)}' is donated inside a loop but "
+                    f"never rebound in the loop body — the next iteration "
+                    f"passes a donated buffer",
+                    symbol=scope.qualname,
+                ))
+                return out
+        for later in stmts[info.index + 1:]:
+            if any(is_prefix(st, donated) for st in later.stores):
+                break
+            hit = next((l for l in later.loads if is_prefix(donated, l)), None)
+            if hit is not None:
+                out.append(self.violation(
+                    mod.path, later.node,
+                    f"'{'.'.join(donated)}' read after being donated to a "
+                    f"jitted call at line {call.lineno} (donate_argnums) — "
+                    f"rebind it from the call's result",
+                    symbol=scope.qualname,
+                ))
+                break
+        return out

@@ -1,0 +1,291 @@
+"""jit-purity: functions that get traced (``jax.jit``, ``pl.pallas_call``)
+must be pure — host-side effects bake a single stale value into the compiled
+program (or silently differ between trace and execution):
+
+  * calls into stdlib ``random`` / ``time`` / ``datetime`` / ``uuid`` /
+    ``secrets`` and ``numpy.random`` — traced ONCE, constant thereafter
+    (``jax.random`` is of course fine);
+  * host I/O: ``print`` / ``input`` / ``open`` / ``os.environ`` /
+    ``os.getenv`` — executes at trace time, not at step time;
+  * iteration over a set literal / ``set(...)`` — hash-order varies across
+    processes, so two hosts can trace different programs (the SPMD
+    divergence failure mode);
+  * capturing a mutable (list/dict/set) that the enclosing scope mutates —
+    the trace snapshots the value at trace time; later mutations are
+    silently ignored.
+
+Discovery: ``jax.jit(f)`` / ``jax.jit(self._f)`` / ``@jax.jit`` /
+``@partial(jax.jit, ...)`` / ``pl.pallas_call(kernel, ...)``, plus lambdas
+passed directly.  Checks recurse depth-3 into same-module callees and
+same-class ``self._helper`` methods.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.core import Rule, Violation, register
+from repro.analysis.project import Module, Project, dotted_path
+from repro.analysis.scopes import function_scopes
+
+IMPURE_MODULES = {"random", "time", "datetime", "uuid", "secrets"}
+IMPURE_BUILTINS = {"print", "input", "open"}
+MUTATORS = {"append", "extend", "update", "pop", "insert", "setdefault",
+            "clear", "remove", "add", "popitem"}
+
+
+def _resolved(mod: Module, node: ast.AST) -> Optional[Tuple[str, ...]]:
+    p = dotted_path(node)
+    return mod.resolve(p) if p else None
+
+
+def _is_jit(mod: Module, call: ast.Call) -> bool:
+    r = _resolved(mod, call.func)
+    return bool(r) and r[-2:] == ("jax", "jit")
+
+
+def _is_pallas_call(mod: Module, call: ast.Call) -> bool:
+    r = _resolved(mod, call.func)
+    return bool(r) and r[-1] == "pallas_call"
+
+
+def _is_partial_jit(mod: Module, call: ast.Call) -> bool:
+    r = _resolved(mod, call.func)
+    if not r or r[-1] != "partial":
+        return False
+    return bool(call.args) and isinstance(call.args[0], (ast.Name,
+                                                         ast.Attribute)) \
+        and _resolved(mod, call.args[0]) is not None \
+        and _resolved(mod, call.args[0])[-2:] == ("jax", "jit")
+
+
+class _FnIndex:
+    """Function definitions reachable by name within one module."""
+
+    def __init__(self, mod: Module):
+        self.mod = mod
+        self.by_name: Dict[str, ast.AST] = {}
+        self.methods: Dict[Tuple[str, str], ast.AST] = {}
+        for scope in function_scopes(mod.tree):
+            self.by_name.setdefault(scope.node.name, scope.node)
+            if scope.class_name:
+                self.methods[(scope.class_name, scope.node.name)] = scope.node
+
+
+@register
+class JitPurity(Rule):
+    name = "jit-purity"
+    description = (
+        "traced (jitted / pallas) functions must not call random/time/"
+        "datetime/print/open, iterate sets, or capture mutated mutables"
+    )
+
+    def run(self, project: Project) -> List[Violation]:
+        out: List[Violation] = []
+        for mod in project.analyzed_modules():
+            out.extend(self._check_module(mod))
+        # dedupe: the same function may be jitted from several sites
+        seen = set()
+        uniq = []
+        for v in out:
+            key = (v.path, v.line, v.message)
+            if key not in seen:
+                seen.add(key)
+                uniq.append(v)
+        return uniq
+
+    def _check_module(self, mod: Module) -> List[Violation]:
+        index = _FnIndex(mod)
+        out: List[Violation] = []
+
+        # 1. decorated defs
+        for scope in function_scopes(mod.tree):
+            for dec in getattr(scope.node, "decorator_list", []):
+                jitted = False
+                if isinstance(dec, ast.Call):
+                    jitted = _is_jit(mod, dec) or _is_partial_jit(mod, dec)
+                else:
+                    r = _resolved(mod, dec)
+                    jitted = bool(r) and r[-2:] == ("jax", "jit")
+                if jitted:
+                    out.extend(self._check_traced(
+                        mod, index, scope.node, scope.qualname,
+                        scope.class_name))
+
+        # 2. jax.jit(f, ...) / pl.pallas_call(kernel, ...) call sites
+        for scope in function_scopes(mod.tree):
+            for node in ast.walk(scope.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                if not (_is_jit(mod, node) or _is_pallas_call(mod, node)):
+                    continue
+                if not node.args:
+                    continue
+                target = node.args[0]
+                fn = self._resolve_target(index, scope.class_name, target)
+                if fn is None:
+                    continue
+                qual = getattr(fn, "name", "<lambda>")
+                out.extend(self._check_traced(
+                    mod, index, fn, qual, scope.class_name))
+                if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    out.extend(self._check_capture(
+                        mod, scope.node, fn, node))
+        return out
+
+    def _resolve_target(self, index: _FnIndex, cls: Optional[str],
+                        target: ast.AST) -> Optional[ast.AST]:
+        if isinstance(target, ast.Lambda):
+            return target
+        p = dotted_path(target)
+        if p is None:
+            return None
+        if len(p) == 1:
+            return index.by_name.get(p[0])
+        if p[0] == "self" and len(p) == 2 and cls:
+            return index.methods.get((cls, p[1]))
+        return None
+
+    # -- purity of the traced body ----------------------------------------
+
+    def _check_traced(self, mod: Module, index: _FnIndex, fn: ast.AST,
+                      qual: str, cls: Optional[str],
+                      depth: int = 3,
+                      seen: Optional[Set[int]] = None) -> List[Violation]:
+        seen = seen if seen is not None else set()
+        if id(fn) in seen:
+            return []
+        seen.add(id(fn))
+        out: List[Violation] = []
+        body = fn.body if isinstance(fn.body, list) else [fn.body]
+        for node in ast.walk(ast.Module(body=body, type_ignores=[])):
+            if isinstance(node, ast.Call):
+                out.extend(self._check_call(mod, node, qual))
+                if depth > 0:
+                    callee = self._resolve_target(index, cls, node.func)
+                    if callee is not None and id(callee) not in seen:
+                        out.extend(self._check_traced(
+                            mod, index, callee, qual, cls,
+                            depth - 1, seen))
+            elif isinstance(node, (ast.For, ast.comprehension)):
+                it = node.iter
+                if isinstance(it, ast.Set) or (
+                        isinstance(it, ast.Call)
+                        and dotted_path(it.func) == ("set",)):
+                    out.append(self.violation(
+                        mod.path, node if isinstance(node, ast.For) else it,
+                        "iteration over a set inside a traced function — "
+                        "hash order varies per process, so SPMD hosts can "
+                        "trace different programs (sort it first)",
+                        symbol=qual))
+            elif isinstance(node, ast.Attribute):
+                r = _resolved(mod, node)
+                if r and r[:2] == ("os", "environ"):
+                    out.append(self.violation(
+                        mod.path, node,
+                        "os.environ read inside a traced function is baked "
+                        "in at trace time",
+                        symbol=qual))
+        return out
+
+    def _check_call(self, mod: Module, call: ast.Call,
+                    qual: str) -> List[Violation]:
+        r = _resolved(mod, call.func)
+        if not r:
+            return []
+        root = r[0]
+        if root in IMPURE_MODULES and len(r) > 1:
+            return [self.violation(
+                mod.path, call,
+                f"'{'.'.join(r)}' called inside a traced function — the "
+                f"value is frozen at trace time (use jax.random / pass it "
+                f"in as an argument)", symbol=qual)]
+        if r[:2] == ("numpy", "random") or (root == "numpy"
+                                            and "random" in r):
+            return [self.violation(
+                mod.path, call,
+                f"'{'.'.join(r)}' inside a traced function — host RNG is "
+                f"frozen at trace time; thread a jax.random key instead",
+                symbol=qual)]
+        if len(r) == 1 and r[0] in IMPURE_BUILTINS:
+            return [self.violation(
+                mod.path, call,
+                f"host '{r[0]}()' inside a traced function executes at "
+                f"trace time only (use jax.debug.print / move it out)",
+                symbol=qual)]
+        if r[:2] in (("os", "getenv"), ("os", "urandom")):
+            return [self.violation(
+                mod.path, call,
+                f"'{'.'.join(r)}' inside a traced function is baked in at "
+                f"trace time", symbol=qual)]
+        return []
+
+    # -- mutable closure capture ------------------------------------------
+
+    def _check_capture(self, mod: Module, enclosing: ast.AST,
+                       fn: ast.AST, jit_call: ast.Call) -> List[Violation]:
+        free = _free_names(fn)
+        if not free:
+            return []
+        mutable_locals: Dict[str, ast.AST] = {}
+        for node in ast.walk(enclosing):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                name = node.targets[0].id
+                v = node.value
+                is_mut = isinstance(v, (ast.List, ast.Dict, ast.Set)) or (
+                    isinstance(v, ast.Call)
+                    and dotted_path(v.func) in (("list",), ("dict",),
+                                                ("set",)))
+                if is_mut:
+                    mutable_locals[name] = node
+        out = []
+        for name in sorted(free & set(mutable_locals)):
+            if _is_mutated(enclosing, name):
+                out.append(self.violation(
+                    mod.path, jit_call,
+                    f"traced function captures mutable '{name}' that the "
+                    f"enclosing scope mutates — the trace snapshots it "
+                    f"once; later mutations are silently ignored",
+                    symbol=getattr(fn, "name", "<lambda>")))
+        return out
+
+
+def _free_names(fn: ast.AST) -> Set[str]:
+    bound: Set[str] = set()
+    args = getattr(fn, "args", None)
+    if args is not None:
+        for a in list(args.posonlyargs) + list(args.args) \
+                + list(args.kwonlyargs):
+            bound.add(a.arg)
+        if args.vararg:
+            bound.add(args.vararg.arg)
+        if args.kwarg:
+            bound.add(args.kwarg.arg)
+    loaded: Set[str] = set()
+    body = fn.body if isinstance(fn.body, list) else [fn.body]
+    for node in ast.walk(ast.Module(body=body, type_ignores=[])):
+        if isinstance(node, ast.Name):
+            if isinstance(node.ctx, ast.Store):
+                bound.add(node.id)
+            elif isinstance(node.ctx, ast.Load):
+                loaded.add(node.id)
+    return loaded - bound
+
+
+def _is_mutated(enclosing: ast.AST, name: str) -> bool:
+    for node in ast.walk(enclosing):
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute):
+            if node.func.attr in MUTATORS \
+                    and isinstance(node.func.value, ast.Name) \
+                    and node.func.value.id == name:
+                return True
+        if isinstance(node, (ast.Assign, ast.AugAssign)):
+            targets = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            for t in targets:
+                if isinstance(t, ast.Subscript) \
+                        and isinstance(t.value, ast.Name) \
+                        and t.value.id == name:
+                    return True
+    return False

@@ -1,0 +1,190 @@
+"""Function-scope and statement-order utilities for the dataflow rules.
+
+The use-after-donate and custody-taint rules both reason about *statement
+order inside one function scope*: something happens at statement i (a buffer
+is donated, a value becomes tainted) and something later must / must not
+happen to the same dotted path.  This module linearizes a function body into
+source-ordered :class:`StmtInfo` records carrying, per statement:
+
+  * the dotted paths it loads (``self.adapter.cache`` -> ("self","adapter",
+    "cache")),
+  * the dotted paths it stores (assignment targets; subscript stores count
+    as loads of the base, not stores — writing into an object is a *use*),
+  * the enclosing loop and ``with`` statements.
+
+Nested function/class definitions are separate scopes and their bodies are
+not traversed.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Iterator, List, Optional, Tuple
+
+from repro.analysis.project import dotted_path
+
+Path_ = Tuple[str, ...]
+
+
+def is_prefix(p: Path_, q: Path_) -> bool:
+    """True when path ``p`` is a (non-strict) prefix of path ``q``."""
+    return len(p) <= len(q) and q[: len(p)] == p
+
+
+def collect_load_paths(expr: ast.AST) -> List[Path_]:
+    """Maximal dotted name chains loaded anywhere inside ``expr``."""
+    out: List[Path_] = []
+
+    def visit(n: ast.AST) -> None:
+        p = dotted_path(n)
+        if p is not None:
+            out.append(p)
+            return
+        for c in ast.iter_child_nodes(n):
+            visit(c)
+
+    visit(expr)
+    return out
+
+
+def _target_paths(target: ast.AST) -> Tuple[List[Path_], List[Path_]]:
+    """(stored paths, loaded paths) of one assignment target.
+
+    ``x``/``a.b.c`` store that path; tuple/list targets recurse;
+    ``x[i] = ...`` *loads* ``x`` (mutation of an existing object) and the
+    index expression.
+    """
+    stores: List[Path_] = []
+    loads: List[Path_] = []
+    if isinstance(target, (ast.Tuple, ast.List)):
+        for el in target.elts:
+            s, l = _target_paths(el)
+            stores.extend(s)
+            loads.extend(l)
+    elif isinstance(target, ast.Starred):
+        return _target_paths(target.value)
+    elif isinstance(target, ast.Subscript):
+        loads.extend(collect_load_paths(target.value))
+        loads.extend(collect_load_paths(target.slice))
+    else:
+        p = dotted_path(target)
+        if p is not None:
+            stores.append(p)
+        else:
+            loads.extend(collect_load_paths(target))
+    return stores, loads
+
+
+@dataclasses.dataclass
+class StmtInfo:
+    node: ast.stmt
+    index: int
+    loops: Tuple[ast.stmt, ...]       # enclosing For/While within the scope
+    withs: Tuple[ast.With, ...]       # enclosing with-statements
+    loads: List[Path_]
+    stores: List[Path_]
+    calls: List[ast.Call]             # every Call evaluated by this statement
+    value: Optional[ast.AST]          # the "header" expression, if any
+
+
+def _header(stmt: ast.stmt):
+    """(exprs evaluated by the statement itself, store targets)."""
+    if isinstance(stmt, ast.Assign):
+        return [stmt.value], stmt.targets
+    if isinstance(stmt, ast.AugAssign):
+        return [stmt.value, stmt.target], [stmt.target]
+    if isinstance(stmt, ast.AnnAssign):
+        return ([stmt.value] if stmt.value else []), [stmt.target]
+    if isinstance(stmt, (ast.Expr, ast.Return)):
+        return ([stmt.value] if stmt.value else []), []
+    if isinstance(stmt, ast.If):
+        return [stmt.test], []
+    if isinstance(stmt, ast.While):
+        return [stmt.test], []
+    if isinstance(stmt, ast.For):
+        return [stmt.iter], [stmt.target]
+    if isinstance(stmt, ast.With):
+        tgts = [i.optional_vars for i in stmt.items if i.optional_vars]
+        return [i.context_expr for i in stmt.items], tgts
+    if isinstance(stmt, ast.Raise):
+        return [e for e in (stmt.exc, stmt.cause) if e], []
+    if isinstance(stmt, ast.Assert):
+        return [e for e in (stmt.test, stmt.msg) if e], []
+    if isinstance(stmt, ast.Delete):
+        return [], stmt.targets
+    return [], []
+
+
+def _children(stmt: ast.stmt) -> List[ast.stmt]:
+    out: List[ast.stmt] = []
+    for field in ("body", "orelse", "finalbody"):
+        out.extend(getattr(stmt, field, []) or [])
+    for h in getattr(stmt, "handlers", []) or []:
+        out.extend(h.body)
+    return out
+
+
+def linearize(body: List[ast.stmt]) -> List[StmtInfo]:
+    """Source-ordered StmtInfo records for a function body."""
+    infos: List[StmtInfo] = []
+
+    def walk(stmts: List[ast.stmt], loops, withs) -> None:
+        for stmt in stmts:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                # separate scope; its *name* is a store in this one
+                infos.append(StmtInfo(
+                    node=stmt, index=len(infos), loops=loops, withs=withs,
+                    loads=[], stores=[(stmt.name,)], calls=[], value=None,
+                ))
+                continue
+            exprs, targets = _header(stmt)
+            loads: List[Path_] = []
+            stores: List[Path_] = []
+            calls: List[ast.Call] = []
+            for e in exprs:
+                loads.extend(collect_load_paths(e))
+                calls.extend(n for n in ast.walk(e)
+                             if isinstance(n, ast.Call))
+            for t in targets:
+                s, l = _target_paths(t)
+                stores.extend(s)
+                loads.extend(l)
+            infos.append(StmtInfo(
+                node=stmt, index=len(infos), loops=loops, withs=withs,
+                loads=loads, stores=stores, calls=calls,
+                value=exprs[0] if exprs else None,
+            ))
+            inner_loops = loops + ((stmt,) if isinstance(
+                stmt, (ast.For, ast.While)) else ())
+            inner_withs = withs + ((stmt,) if isinstance(
+                stmt, ast.With) else ())
+            walk(_children(stmt), inner_loops, inner_withs)
+
+    walk(body, (), ())
+    return infos
+
+
+@dataclasses.dataclass
+class Scope:
+    qualname: str
+    node: ast.AST                     # FunctionDef
+    class_name: Optional[str]         # enclosing class, if a method
+    stmts: List[StmtInfo]
+
+
+def function_scopes(tree: ast.Module) -> Iterator[Scope]:
+    """Every function/method scope of a module, outermost first."""
+
+    def visit(node: ast.AST, qual: str, cls: Optional[str]) -> Iterator[Scope]:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                q = f"{qual}.{child.name}" if qual else child.name
+                yield Scope(qualname=q, node=child, class_name=cls,
+                            stmts=linearize(child.body))
+                yield from visit(child, q, cls)
+            elif isinstance(child, ast.ClassDef):
+                q = f"{qual}.{child.name}" if qual else child.name
+                yield from visit(child, q, child.name)
+
+    yield from visit(tree, "", None)

@@ -129,9 +129,42 @@ class CustodyEvent:
 
 def audit_custody(log: Sequence[CustodyEvent]) -> Dict[str, int]:
     """The paper's privacy claim over the custody log: private shards may be
-    provisioned (to their owner) or quarantined, NEVER re-homed."""
-    moved = sum(1 for e in log if e.private and e.kind == "rehome")
-    return {"private_shards_rehomed": moved}
+    provisioned (to their owner) or quarantined, NEVER re-homed.
+
+    Beyond the headline re-home count, two log pathologies are flagged:
+
+    * ``private_shards_resurrected`` — a private shard provisioned *after*
+      it was quarantined: tombstoned bytes coming back to life means some
+      device re-materialized data whose owner is gone.
+    * ``duplicate_provisions`` — the same shard provisioned twice to the
+      same custodian with no intervening custody change: double-counted
+      custody makes the rest of the log unauditable.
+    """
+    moved = 0
+    resurrected = 0
+    duplicates = 0
+    quarantined: set = set()
+    live: set = set()                 # (shard_id, custodian) currently held
+    for e in log:
+        if e.kind == "rehome":
+            if e.private:
+                moved += 1
+            live.discard((e.shard_id, e.src))
+            live.add((e.shard_id, e.dst))
+        elif e.kind == "quarantine":
+            quarantined.add(e.shard_id)
+            live = {lv for lv in live if lv[0] != e.shard_id}
+        elif e.kind == "provision":
+            if e.private and e.shard_id in quarantined:
+                resurrected += 1
+            if (e.shard_id, e.dst) in live:
+                duplicates += 1
+            live.add((e.shard_id, e.dst))
+    return {
+        "private_shards_rehomed": moved,
+        "private_shards_resurrected": resurrected,
+        "duplicate_provisions": duplicates,
+    }
 
 
 def leakage_report(

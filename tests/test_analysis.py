@@ -1,0 +1,604 @@
+"""Tests for repro.analysis — the static custody/jit-safety CI gate.
+
+Each rule gets at least one minimal synthetic project where it MUST fire and
+the corrected form of the same code where it must stay silent.  The last
+section runs the analyzer over this repository itself with the checked-in
+baseline and asserts the gate is green — the same invocation scripts/ci.sh
+makes.
+"""
+import json
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import Baseline, Project, Suppression, Violation, run_analysis
+from repro.analysis.__main__ import main as analysis_main
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def make_project(tmp_path, files):
+    for rel, src in files.items():
+        f = tmp_path / rel
+        f.parent.mkdir(parents=True, exist_ok=True)
+        f.write_text(textwrap.dedent(src))
+    return Project.load(tmp_path)
+
+
+def analyze(tmp_path, files, rule):
+    proj = make_project(tmp_path, files)
+    res = run_analysis(tmp_path, rules=[rule], project=proj)
+    return res.violations
+
+
+DEVICE_MOD = """
+    class BaseStorageDevice:
+        def read(self, key):
+            return b"private-bytes"
+
+        def assemble(self, draws):
+            return b"rows"
+"""
+
+
+# ---------------------------------------------------------------------------
+# custody-taint
+# ---------------------------------------------------------------------------
+
+
+def test_custody_private_read_to_checkpoint_sink_fires(tmp_path):
+    vs = analyze(tmp_path, {
+        "src/repro/storage/device.py": DEVICE_MOD,
+        "src/repro/api/train.py": """
+            from repro.storage.device import BaseStorageDevice
+
+            class Trainer:
+                def __init__(self):
+                    self.device = BaseStorageDevice()
+
+                def snapshot(self, ckpt):
+                    batch = self.device.read("shard-0")
+                    ckpt.save(0, {"batch": batch})
+        """,
+    }, "custody-taint")
+    assert any("checkpoint sink" in v.message for v in vs), vs
+
+
+def test_custody_checkpoint_of_clean_state_is_silent(tmp_path):
+    vs = analyze(tmp_path, {
+        "src/repro/storage/device.py": DEVICE_MOD,
+        "src/repro/api/train.py": """
+            from repro.storage.device import BaseStorageDevice
+
+            class Trainer:
+                def __init__(self):
+                    self.device = BaseStorageDevice()
+
+                def snapshot(self, ckpt, params):
+                    batch = self.device.read("shard-0")
+                    ckpt.save(0, {"params": params})
+        """,
+    }, "custody-taint")
+    assert vs == []
+
+
+def test_custody_serialization_sink_fires(tmp_path):
+    vs = analyze(tmp_path, {
+        "src/repro/storage/dump.py": """
+            import json
+
+            def leak(device, fh):
+                batch = device.read("shard-0")
+                json.dump({"rows": batch}, fh)
+        """,
+    }, "custody-taint")
+    assert any("json.dump" in v.message for v in vs), vs
+
+
+def test_custody_unguarded_feed_fires(tmp_path):
+    vs = analyze(tmp_path, {
+        "src/repro/storage/feedmod.py": """
+            class Feeder:
+                def feed(self, batch):
+                    return batch
+
+            def land(feeder, device):
+                batch = device.read("shard-0")
+                return feeder.feed(batch)
+        """,
+    }, "custody-taint")
+    assert any("host->device boundary" in v.message for v in vs), vs
+
+
+def test_custody_guarded_feed_sanitizes(tmp_path):
+    # the guard inside the callee both permits the crossing AND declassifies
+    # the result: downstream serialization of the fed batch is fine
+    vs = analyze(tmp_path, {
+        "src/repro/storage/feedmod.py": """
+            import jax
+            import json
+
+            class Feeder:
+                def feed(self, batch):
+                    with jax.transfer_guard_host_to_device("disallow"):
+                        return batch
+
+            def land(feeder, device, fh):
+                batch = device.read("shard-0")
+                out = feeder.feed(batch)
+                json.dump({"loss": out}, fh)
+                return out
+        """,
+    }, "custody-taint")
+    assert vs == []
+
+
+def test_custody_lexical_guard_at_call_site_is_silent(tmp_path):
+    vs = analyze(tmp_path, {
+        "src/repro/storage/feedmod.py": """
+            import jax
+
+            def land(feeder, device):
+                batch = device.read("shard-0")
+                with jax.transfer_guard_host_to_device("disallow"):
+                    out = feeder.feed(batch)
+                return out
+        """,
+    }, "custody-taint")
+    assert vs == []
+
+
+def test_custody_event_audit_permits_feed(tmp_path):
+    vs = analyze(tmp_path, {
+        "src/repro/storage/feedmod.py": """
+            from repro.core.privacy import CustodyEvent
+
+            def land(feeder, device, custody_log):
+                batch = device.read("shard-0")
+                custody_log.append(CustodyEvent("feed", "w0", "mesh"))
+                return feeder.feed(batch)
+        """,
+    }, "custody-taint")
+    assert vs == []
+
+
+def test_custody_taint_flows_through_method_return(tmp_path):
+    vs = analyze(tmp_path, {
+        "src/repro/storage/batcher.py": """
+            import pickle
+
+            class Batcher:
+                def __init__(self, device):
+                    self.dev = device
+
+                def next_batch(self):
+                    return self.dev.read("shard-0")
+
+            def leak(b: Batcher, fh):
+                rows = b.next_batch()
+                pickle.dump(rows, fh)
+        """,
+    }, "custody-taint")
+    assert any("pickle.dump" in v.message for v in vs), vs
+
+
+# ---------------------------------------------------------------------------
+# use-after-donate
+# ---------------------------------------------------------------------------
+
+
+def test_donated_cache_read_after_call_fires(tmp_path):
+    vs = analyze(tmp_path, {
+        "src/repro/serve/runner.py": """
+            import jax
+
+            class StepRunner:
+                def __init__(self):
+                    self.decode = jax.jit(self._decode_fn, donate_argnums=(2,))
+
+                def _decode_fn(self, params, tokens, cache):
+                    return tokens, cache
+
+                def step(self, params, tokens, cache):
+                    out, new_cache = self.decode(params, tokens, cache)
+                    stale = cache["k"]
+                    return out, new_cache, stale
+        """,
+    }, "use-after-donate")
+    assert any("'cache' read after being donated" in v.message for v in vs), vs
+
+
+def test_donated_cache_rebound_in_same_statement_is_silent(tmp_path):
+    vs = analyze(tmp_path, {
+        "src/repro/serve/runner.py": """
+            import jax
+
+            class StepRunner:
+                def __init__(self):
+                    self.decode = jax.jit(self._decode_fn, donate_argnums=(2,))
+
+                def _decode_fn(self, params, tokens, cache):
+                    return tokens, cache
+
+                def step(self, params, tokens, cache):
+                    out, cache = self.decode(params, tokens, cache)
+                    return out, cache
+        """,
+    }, "use-after-donate")
+    assert vs == []
+
+
+def test_donation_in_loop_without_rebind_fires(tmp_path):
+    vs = analyze(tmp_path, {
+        "src/repro/api/loop.py": """
+            import jax
+
+            def train(step_fn, params, batches):
+                step = jax.jit(step_fn, donate_argnums=(0,))
+                for b in batches:
+                    out = step(params, b)
+                return out
+        """,
+    }, "use-after-donate")
+    assert any("donated inside a loop" in v.message for v in vs), vs
+
+
+def test_donation_in_loop_with_rebind_is_silent(tmp_path):
+    vs = analyze(tmp_path, {
+        "src/repro/api/loop.py": """
+            import jax
+
+            def train(step_fn, params, batches):
+                step = jax.jit(step_fn, donate_argnums=(0,))
+                for b in batches:
+                    params, out = step(params, b)
+                return params, out
+        """,
+    }, "use-after-donate")
+    assert vs == []
+
+
+def test_lowered_aot_chain_is_exempt(tmp_path):
+    vs = analyze(tmp_path, {
+        "src/repro/launch/aot.py": """
+            import jax
+
+            def lower_only(step_fn, params, batch):
+                lowered = jax.jit(step_fn, donate_argnums=(0,)).lower(params, batch)
+                cost = lowered.compile().cost_analysis()
+                return cost, params
+        """,
+    }, "use-after-donate")
+    assert vs == []
+
+
+def test_immediate_jit_invocation_fires(tmp_path):
+    vs = analyze(tmp_path, {
+        "src/repro/launch/aot.py": """
+            import jax
+
+            def run_once(step_fn, params, batch):
+                out = jax.jit(step_fn, donate_argnums=(0,))(params, batch)
+                norm = params["w"].sum()
+                return out, norm
+        """,
+    }, "use-after-donate")
+    assert any("'params' read after being donated" in v.message for v in vs), vs
+
+
+# ---------------------------------------------------------------------------
+# jit-purity
+# ---------------------------------------------------------------------------
+
+
+def test_host_clock_inside_jit_fires(tmp_path):
+    vs = analyze(tmp_path, {
+        "src/repro/api/stepmod.py": """
+            import time
+            import jax
+
+            @jax.jit
+            def step(x):
+                t0 = time.perf_counter()
+                return x + t0
+        """,
+    }, "jit-purity")
+    assert any("time.perf_counter" in v.message for v in vs), vs
+
+
+def test_clock_passed_as_argument_is_silent(tmp_path):
+    vs = analyze(tmp_path, {
+        "src/repro/api/stepmod.py": """
+            import jax
+
+            @jax.jit
+            def step(x, t0):
+                return x + t0
+        """,
+    }, "jit-purity")
+    assert vs == []
+
+
+def test_set_iteration_inside_jit_fires(tmp_path):
+    vs = analyze(tmp_path, {
+        "src/repro/api/stepmod.py": """
+            import jax
+
+            @jax.jit
+            def step(x):
+                for name in {"wq", "wk", "wv"}:
+                    x = x + len(name)
+                return x
+        """,
+    }, "jit-purity")
+    assert any("set" in v.message for v in vs), vs
+
+
+def test_sorted_iteration_inside_jit_is_silent(tmp_path):
+    vs = analyze(tmp_path, {
+        "src/repro/api/stepmod.py": """
+            import jax
+
+            @jax.jit
+            def step(x):
+                for name in ("wq", "wk", "wv"):
+                    x = x + len(name)
+                return x
+        """,
+    }, "jit-purity")
+    assert vs == []
+
+
+def test_mutated_closure_capture_fires(tmp_path):
+    vs = analyze(tmp_path, {
+        "src/repro/api/stepmod.py": """
+            import jax
+
+            def make_step(scale):
+                stats = []
+
+                def step(x):
+                    return x * scale + len(stats)
+
+                fn = jax.jit(step)
+                stats.append(1)
+                return fn
+        """,
+    }, "jit-purity")
+    assert any("captures mutable 'stats'" in v.message for v in vs), vs
+
+
+def test_immutable_capture_is_silent(tmp_path):
+    vs = analyze(tmp_path, {
+        "src/repro/api/stepmod.py": """
+            import jax
+
+            def make_step(scale):
+                def step(x):
+                    return x * scale
+
+                return jax.jit(step)
+        """,
+    }, "jit-purity")
+    assert vs == []
+
+
+def test_numpy_random_inside_jitted_method_fires(tmp_path):
+    vs = analyze(tmp_path, {
+        "src/repro/api/stepmod.py": """
+            import jax
+            import numpy as np
+
+            class Runner:
+                def __init__(self):
+                    self.step = jax.jit(self._step)
+
+                def _step(self, x):
+                    return x + np.random.rand()
+        """,
+    }, "jit-purity")
+    assert any("random" in v.message for v in vs), vs
+
+
+# ---------------------------------------------------------------------------
+# kernel-parity-coverage
+# ---------------------------------------------------------------------------
+
+
+def test_kernel_without_oracle_fires(tmp_path):
+    vs = analyze(tmp_path, {
+        "src/repro/kernels/ops.py": """
+            def fused_matmul(x, y):
+                return x @ y
+        """,
+        "src/repro/kernels/ref.py": "",
+        "tests/test_kernels.py": "",
+    }, "kernel-parity-coverage")
+    assert any("no 'fused_matmul_ref' oracle" in v.message for v in vs), vs
+
+
+def test_kernel_exercised_but_unverified_fires(tmp_path):
+    vs = analyze(tmp_path, {
+        "src/repro/kernels/ops.py": """
+            def fused_matmul(x, y):
+                return x @ y
+        """,
+        "src/repro/kernels/ref.py": """
+            def fused_matmul_ref(x, y):
+                return x @ y
+        """,
+        "tests/test_kernels.py": """
+            from repro.kernels import ops
+
+            def test_runs():
+                assert ops.fused_matmul(1, 2)
+        """,
+    }, "kernel-parity-coverage")
+    assert any("exercised but unverified" in v.message for v in vs), vs
+
+
+def test_kernel_with_parity_test_is_silent(tmp_path):
+    vs = analyze(tmp_path, {
+        "src/repro/kernels/ops.py": """
+            def fused_matmul(x, y):
+                return x @ y
+        """,
+        "src/repro/kernels/ref.py": """
+            def fused_matmul_ref(x, y):
+                return x @ y
+        """,
+        "tests/test_kernels.py": """
+            from repro.kernels import ops
+            from repro.kernels import ref as R
+
+            def test_parity():
+                assert ops.fused_matmul(1, 2) == R.fused_matmul_ref(1, 2)
+        """,
+    }, "kernel-parity-coverage")
+    assert vs == []
+
+
+def test_kernel_assignment_export_is_covered(tmp_path):
+    # `dequant = _impl` style public exports count as kernels too
+    vs = analyze(tmp_path, {
+        "src/repro/kernels/ops.py": """
+            def _impl(q, s):
+                return q * s
+
+            dequant = _impl
+        """,
+        "src/repro/kernels/ref.py": "",
+        "tests/test_kernels.py": "",
+    }, "kernel-parity-coverage")
+    assert any(v.symbol == "dequant" for v in vs), vs
+
+
+# ---------------------------------------------------------------------------
+# sharding-rule-coverage
+# ---------------------------------------------------------------------------
+
+
+SHARDING_MOD = """
+    def make_rules(data_axis):
+        return {
+            "batch": (data_axis,),
+            "embed": (None,),
+        }
+"""
+
+
+def test_unlisted_axis_fires(tmp_path):
+    vs = analyze(tmp_path, {
+        "src/repro/distributed/sharding.py": SHARDING_MOD,
+        "src/repro/models/toy.py": """
+            def build(b):
+                b.param("w", (4, 8), ("embed", "novel_axis"))
+        """,
+    }, "sharding-rule-coverage")
+    assert [v.symbol for v in vs] == ["novel_axis"], vs
+
+
+def test_listed_axes_are_silent(tmp_path):
+    vs = analyze(tmp_path, {
+        "src/repro/distributed/sharding.py": SHARDING_MOD,
+        "src/repro/models/toy.py": """
+            def build(b, x):
+                b.param("w", (4, 8), ("embed", "batch"))
+                return wlc(x, "batch", "embed")
+        """,
+    }, "sharding-rule-coverage")
+    assert vs == []
+
+
+def test_setdefault_amendment_counts_as_listed(tmp_path):
+    vs = analyze(tmp_path, {
+        "src/repro/distributed/sharding.py": SHARDING_MOD,
+        "src/repro/launch/amend.py": """
+            def amend(rules):
+                rules.setdefault("seq_data", ("data",))
+        """,
+        "src/repro/models/toy.py": """
+            def build(b):
+                b.param("w", (4, 8), ("embed", "seq_data"))
+        """,
+    }, "sharding-rule-coverage")
+    assert vs == []
+
+
+# ---------------------------------------------------------------------------
+# baseline mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_suppression_matching():
+    v = Violation(path="a/b.py", line=3, rule="custody-taint",
+                  message="m", symbol="f")
+    assert Suppression(rule="custody-taint", path="a/b.py", reason="r").matches(v)
+    assert Suppression(rule="custody-taint", path="a/b.py", symbol="f",
+                       reason="r").matches(v)
+    assert not Suppression(rule="custody-taint", path="a/b.py", symbol="g",
+                           reason="r").matches(v)
+    assert not Suppression(rule="jit-purity", path="a/b.py",
+                           reason="r").matches(v)
+
+
+def test_baseline_reason_is_mandatory(tmp_path):
+    bl = tmp_path / "baseline.json"
+    bl.write_text(json.dumps({"suppressions": [
+        {"rule": "custody-taint", "path": "x.py"}
+    ]}))
+    with pytest.raises(ValueError, match="no reason"):
+        Baseline.load(bl)
+
+
+def test_baseline_filters_and_reports_unused(tmp_path):
+    proj = make_project(tmp_path, {
+        "src/repro/storage/dump.py": """
+            import json
+
+            def leak(device, fh):
+                json.dump(device.read("shard-0"), fh)
+        """,
+    })
+    baseline = Baseline([
+        Suppression(rule="custody-taint", path="src/repro/storage/dump.py",
+                    symbol="leak", reason="test fixture"),
+        Suppression(rule="custody-taint", path="src/repro/storage/other.py",
+                    reason="stale entry"),
+    ])
+    res = run_analysis(tmp_path, rules=["custody-taint"], project=proj,
+                       baseline=baseline)
+    assert res.ok
+    assert res.suppressed == 1
+    assert [s.path for s in res.unused_suppressions] == [
+        "src/repro/storage/other.py"]
+
+
+def test_unknown_rule_is_an_error(tmp_path):
+    make_project(tmp_path, {"src/repro/x.py": "pass"})
+    with pytest.raises(KeyError, match="unknown rule"):
+        run_analysis(tmp_path, rules=["no-such-rule"])
+
+
+# ---------------------------------------------------------------------------
+# the repo itself is clean under the checked-in baseline (the CI gate)
+# ---------------------------------------------------------------------------
+
+
+def test_repo_passes_its_own_gate(tmp_path):
+    out = tmp_path / "report.json"
+    rc = analysis_main([
+        "--root", str(REPO),
+        "--baseline", "analysis-baseline.json",
+        "--json", str(out), "-q",
+    ])
+    report = json.loads(out.read_text())
+    assert rc == 0, report["violations"]
+    assert report["ok"]
+    assert set(report["rules"]) == {
+        "custody-taint", "jit-purity", "kernel-parity-coverage",
+        "sharding-rule-coverage", "use-after-donate",
+    }
+    # every baselined suppression must still be earning its keep
+    assert report["unused_suppressions"] == []

@@ -242,6 +242,27 @@ def test_quantize_error_bounded_by_scale():
     assert float(jnp.max(err - s)) <= 1e-6  # |err| <= scale (stochastic floor)
 
 
+def test_dequantize_round_trip_matches_oracle():
+    """dequantize(quantize(x)) agrees with the reference pair end to end."""
+    ks = jax.random.split(jax.random.fold_in(KEY, 42), 2)
+    x = jax.random.normal(ks[0], (48, 192)) * 2.5
+    noise = jax.random.uniform(ks[1], (48, 192))
+    q, s = ops.quantize_int8(x, noise, interpret=True)
+    got = ops.dequantize_int8(q, s)
+    want = R.dequantize_int8_ref(*R.quantize_int8_ref(x, noise))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+
+
+def test_dequantize_dtype_matches_oracle():
+    x = jax.random.normal(KEY, (8, 64))
+    noise = jax.random.uniform(jax.random.fold_in(KEY, 3), (8, 64))
+    q, s = ops.quantize_int8(x, noise, interpret=True)
+    got = ops.dequantize_int8(q, s, dtype=jnp.bfloat16)
+    want = R.dequantize_int8_ref(q, s, dtype=jnp.bfloat16)
+    assert got.dtype == jnp.bfloat16
+    assert bool(jnp.all(got == want))
+
+
 def test_quantize_stochastic_unbiased():
     """E[dequant(quant(x))] == x across noise draws."""
     x = jnp.full((1, 64), 0.3141, jnp.float32)

@@ -146,7 +146,10 @@ def test_worker_lost_rehomes_public_quarantines_private(backend, tmp_path):
     # survivors' own private shards are untouched
     fleet.device("w1").read("priv-w1", 0)
     # and the audit proves no private shard ever moved
-    assert audit_custody(fleet.custody_log) == {"private_shards_rehomed": 0}
+    audit = audit_custody(fleet.custody_log)
+    assert audit["private_shards_rehomed"] == 0
+    assert audit["private_shards_resurrected"] == 0
+    assert audit["duplicate_provisions"] == 0
     kinds = {(e.kind, e.shard_id) for e in fleet.custody_log}
     assert ("quarantine", "priv-w0") in kinds
     assert ("rehome", "pub") in kinds
