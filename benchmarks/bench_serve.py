@@ -34,8 +34,9 @@ PROMPT_LEN = 16
 MAX_NEW = 8
 
 
-def bench_one(arch: str, *, requests: int, shared_prefix: int, seed: int):
-    cfg = smoke_config(arch)
+def bench_one(arch: str, *, requests: int, shared_prefix: int, seed: int,
+              kv_cache_dtype: str = "native", name: str = None):
+    cfg = smoke_config(arch).with_(kv_cache_dtype=kv_cache_dtype)
     model = get_model(cfg)
     params, _ = model.init_params(key=jax.random.PRNGKey(seed))
     # prefill_chunk == block_size so every block boundary is a chunk
@@ -49,7 +50,19 @@ def bench_one(arch: str, *, requests: int, shared_prefix: int, seed: int):
         engine, n_requests=requests, prompt_len=PROMPT_LEN,
         max_new_tokens=MAX_NEW, shared_prefix_len=shared_prefix, seed=seed,
     )
-    return report.to_json()
+    rec = report.to_json()
+    rec["name"] = name or arch
+    rec["kv_cache_dtype"] = kv_cache_dtype
+    # resident page-pool footprint — THE serving memory cost; int8 KV
+    # (+ per-row scales) should land at ~1/4 of the native pool.  Recurrent
+    # families have no page pool; report their slot state instead.
+    store = getattr(engine.adapter, "pool", None)
+    if store is None:
+        store = engine.adapter.cache
+    rec["kv_pool_bytes"] = sum(
+        int(leaf.nbytes) for leaf in jax.tree_util.tree_leaves(store)
+    )
+    return rec
 
 
 def main(argv=None) -> int:
@@ -60,15 +73,20 @@ def main(argv=None) -> int:
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args(argv)
 
+    runs = [dict(arch=a) for a in ARCHS]
+    # int8 KV-cache pool A/B against the native deepseek record
+    runs.append(dict(arch="deepseek-7b", kv_cache_dtype="int8",
+                     name="deepseek-7b-kv-int8"))
     records = []
-    for arch in ARCHS:
-        rec = bench_one(arch, requests=args.requests,
-                        shared_prefix=args.shared_prefix, seed=args.seed)
+    for kw in runs:
+        rec = bench_one(requests=args.requests,
+                        shared_prefix=args.shared_prefix, seed=args.seed, **kw)
         records.append(rec)
-        print(f"[bench_serve] {arch:20s} {rec['requests_per_s']:8.2f} req/s  "
+        print(f"[bench_serve] {rec['name']:20s} {rec['requests_per_s']:8.2f} req/s  "
               f"p50={rec['latency_p50_ms']:.0f}ms p99={rec['latency_p99_ms']:.0f}ms  "
               f"ttft_p50={rec['ttft_p50_ms']:.0f}ms  "
-              f"hit_rate={rec['prefix_hit_rate']:.3f}")
+              f"hit_rate={rec['prefix_hit_rate']:.3f}  "
+              f"kv_pool={rec['kv_pool_bytes']:,}B")
 
     out = {
         "benchmark": "serve_load",

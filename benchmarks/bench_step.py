@@ -14,8 +14,19 @@ mesh-sharded) on an 8-fake-device CPU mesh it records:
   * ``step_h2d_bytes``    — host bytes fed per training step (the batch)
   * ``data_axis`` / ``n_devices`` — the plan's mesh
 
+Beyond the two backend records it benches per-arch hot paths: the MoE model
+with the fused Pallas dispatch kernel vs the dense gather/scatter path (the
+A/B for the fusion work), the rwkv6 linear-recurrence arch, and the flash
+backend at both spool codecs (``spool_bytes`` records the at-rest payload —
+the narrow codec writes ~4x less).
+
+``--compare SNAPSHOT`` re-runs the bench and exits nonzero if any
+non-cluster record regresses more than 25% in ``steps_per_s`` vs the
+committed snapshot — the CI throughput gate.
+
 Usage:
     PYTHONPATH=src python benchmarks/bench_step.py [--steps 8] [--out BENCH_step.json]
+    PYTHONPATH=src python benchmarks/bench_step.py --compare BENCH_step.json
 """
 from __future__ import annotations
 
@@ -45,9 +56,11 @@ SEQ_LEN = 16
 WARMUP = 2
 
 
-def _session(backend: str, steps: int) -> Session:
-    cfg = smoke_config(ARCH)
-    spec = FleetSpec.demo(n_csds=3).with_storage(backend)
+def _session(backend: str, steps: int, arch: str = ARCH,
+             codec: str = None) -> Session:
+    cfg = smoke_config(arch)
+    storage_kw = {"codec": codec} if codec else {}
+    spec = FleetSpec.demo(n_csds=3).with_storage(backend, **storage_kw)
     return Session(
         model=get_model(cfg),
         optimizer=adamw(),
@@ -58,8 +71,26 @@ def _session(backend: str, steps: int) -> Session:
     )
 
 
-def bench_one(backend: str, steps: int) -> Dict:
-    s = _session(backend, steps)
+def bench_one(backend: str, steps: int, *, arch: str = ARCH,
+              name: str = None, moe_impl: str = None,
+              codec: str = None) -> Dict:
+    """One throughput record.  ``moe_impl`` forces the MoE dispatch path
+    (the fused-vs-dense A/B); ``codec`` selects the flash spool width."""
+    from repro.models import moe as moe_mod
+
+    saved_impl = moe_mod.MOE_IMPL
+    if moe_impl is not None:
+        moe_mod.MOE_IMPL = moe_impl
+    try:
+        return _bench_one_inner(backend, steps, arch=arch, name=name,
+                                moe_impl=moe_impl, codec=codec)
+    finally:
+        moe_mod.MOE_IMPL = saved_impl
+
+
+def _bench_one_inner(backend: str, steps: int, *, arch: str,
+                     name: str, moe_impl: str, codec: str) -> Dict:
+    s = _session(backend, steps, arch=arch, codec=codec)
     compiled = s.compile()
     plan = s.shard()
 
@@ -106,9 +137,10 @@ def bench_one(backend: str, steps: int) -> Dict:
     jax.block_until_ready(metrics["loss"])
     dt = time.perf_counter() - t0
 
-    return {
+    rec = {
+        "name": name or backend,
         "backend": backend,
-        "arch": ARCH,
+        "arch": arch,
         "steps": steps,
         "n_processes": 1,
         "steps_per_s": round(steps / dt, 3),
@@ -123,6 +155,16 @@ def bench_one(backend: str, steps: int) -> Dict:
         "n_devices": plan.n_devices,
         "loss_final": float(metrics["loss"]),
     }
+    if moe_impl is not None:
+        rec["moe_impl"] = moe_impl
+    if backend == "flash":
+        # bytes each device wrote to its own flash (the paper's at-rest cost)
+        devices = list(s.devices)
+        rec["codec"] = devices[0].codec if devices else codec
+        rec["spool_bytes"] = sum(
+            getattr(d, "spooled_bytes", 0) for d in devices
+        )
+    return rec
 
 
 def bench_cluster(steps: int, processes: int = 2, local_devices: int = 4) -> Dict:
@@ -149,6 +191,7 @@ def bench_cluster(steps: int, processes: int = 2, local_devices: int = 4) -> Dic
     recs = result.records
     r0 = result.record(0)
     return {
+        "name": "cluster",
         "backend": "cluster",
         "arch": ARCH,
         "steps": steps,
@@ -174,7 +217,19 @@ def bench_cluster(steps: int, processes: int = 2, local_devices: int = 4) -> Dic
 
 def run(steps: int = 8, out: str = "BENCH_step.json", verbose: bool = True,
         cluster: bool = True):
-    records = [bench_one(b, steps) for b in ("synthetic", "meshfeed")]
+    records = [
+        bench_one("synthetic", steps),
+        bench_one("meshfeed", steps),
+        # fused-vs-dense MoE dispatch A/B (same arch, same data)
+        bench_one("synthetic", steps, arch="qwen3-moe-30b-a3b",
+                  moe_impl="fused", name="moe-fused"),
+        bench_one("synthetic", steps, arch="qwen3-moe-30b-a3b",
+                  moe_impl="dense", name="moe-dense"),
+        bench_one("synthetic", steps, arch="rwkv6-7b", name="rwkv6"),
+        # flash spool width A/B: same samples, 4x fewer bytes at rest
+        bench_one("flash", steps, codec="i32", name="flash-i32"),
+        bench_one("flash", steps, codec="auto", name="flash-auto"),
+    ]
     if cluster:
         records.append(bench_cluster(steps))
     payload = {
@@ -188,7 +243,7 @@ def run(steps: int = 8, out: str = "BENCH_step.json", verbose: bool = True,
         for r in records:
             if r["backend"] == "cluster":
                 print(
-                    f"[{r['backend']:>9s}] {r['steps_per_s']:6.2f} steps/s  "
+                    f"[{r['name']:>10s}] {r['steps_per_s']:6.2f} steps/s  "
                     f"compiles={r['compile_count']}  "
                     f"procs={r['n_processes']} ({r['mode']})  "
                     f"feed={r['feed_bytes_per_step']:,}B/step "
@@ -196,16 +251,52 @@ def run(steps: int = 8, out: str = "BENCH_step.json", verbose: bool = True,
                     f"data_axis={r['data_axis']}/{r['n_devices']}dev"
                 )
                 continue
+            extra = ""
+            if "spool_bytes" in r:
+                extra = f"  spool={r['spool_bytes']:,}B ({r['codec']})"
             print(
-                f"[{r['backend']:>9s}] {r['steps_per_s']:6.2f} steps/s  "
+                f"[{r['name']:>10s}] {r['steps_per_s']:6.2f} steps/s  "
                 f"compiles={r['compile_count']}  "
                 f"init h2d={r['init_h2d_bytes']}B "
                 f"(host path would move {r['host_init_bytes']:,}B)  "
                 f"batch h2d={r['step_h2d_bytes']:,}B/step  "
-                f"data_axis={r['data_axis']}/{r['n_devices']}dev"
+                f"data_axis={r['data_axis']}/{r['n_devices']}dev{extra}"
             )
         print(f"wrote {out}")
     return payload
+
+
+def compare(payload: Dict, snapshot, threshold: float = 0.25):
+    """Gate against a committed snapshot (path or loaded payload): any record
+    whose ``steps_per_s`` drops more than ``threshold`` below the snapshot's
+    is a regression.  The cluster record is excluded — its throughput is
+    barrier-paced across worker subprocesses and far too noisy for a hard
+    CI gate."""
+    if isinstance(snapshot, str):
+        with open(snapshot) as f:
+            old = json.load(f)
+    else:
+        old = snapshot
+    old_by = {r.get("name", r["backend"]): r for r in old["records"]}
+    regressions = []
+    for r in payload["records"]:
+        key = r.get("name", r["backend"])
+        if r["backend"] == "cluster":
+            continue
+        o = old_by.get(key)
+        if o is None:
+            print(f"[compare] {key:>10s} (new record — no baseline)")
+            continue
+        floor = o["steps_per_s"] * (1.0 - threshold)
+        ok = r["steps_per_s"] >= floor
+        print(
+            f"[compare] {key:>10s} {o['steps_per_s']:8.2f} -> "
+            f"{r['steps_per_s']:8.2f} steps/s  "
+            f"({'ok' if ok else f'REGRESSED below {floor:.2f}'})"
+        )
+        if not ok:
+            regressions.append(key)
+    return regressions
 
 
 def _checks(payload: Dict) -> Dict[str, bool]:
@@ -233,8 +324,22 @@ if __name__ == "__main__":
     ap.add_argument("--out", default="BENCH_step.json")
     ap.add_argument("--no-cluster", action="store_true",
                     help="skip the 2-process cluster record")
+    ap.add_argument("--compare", metavar="SNAPSHOT",
+                    help="gate against a committed BENCH_step.json: exit "
+                         "nonzero if any record regresses >25%% in steps/s")
     args = ap.parse_args()
+    # load the snapshot BEFORE run() — --out may overwrite the same file
+    snapshot = None
+    if args.compare:
+        with open(args.compare) as f:
+            snapshot = json.load(f)
     payload = run(steps=args.steps, out=args.out, cluster=not args.no_cluster)
     checks = _checks(payload)
     print("checks:", checks)
-    sys.exit(0 if all(checks.values()) else 1)
+    rc = 0 if all(checks.values()) else 1
+    if snapshot is not None:
+        regressions = compare(payload, snapshot)
+        if regressions:
+            print(f"REGRESSIONS: {regressions}")
+            rc = 1
+    sys.exit(rc)

@@ -15,7 +15,13 @@ else
     echo "[ci] pip install unavailable; using preinstalled deps"
 fi
 
-python -m pytest -x -q
+echo "[ci] kernel parity suite (interpret-mode Pallas vs jnp oracles):"
+echo "[ci]   every public repro.kernels.ops export — flash/decode/paged"
+echo "[ci]   attention (+ int8 KV variants), fused MoE, rglru/rwkv6 scans,"
+echo "[ci]   int8 quantize — against its *_ref, fwd and (where vjp'd) grads"
+python -m pytest -x -q tests/test_kernels.py
+
+python -m pytest -x -q --ignore=tests/test_kernels.py
 
 echo "[ci] static analysis gate (custody-taint, use-after-donate,"
 echo "[ci]   jit-purity, kernel-parity-coverage, sharding-rule-coverage):"
@@ -49,8 +55,9 @@ echo "[ci]   and per-request events stream in order (dense + rwkv6)"
 PYTHONPATH=src python benchmarks/serve_smoke.py
 
 echo "[ci] step benchmark (8-device CPU mesh + 2-process cluster record)"
-echo "[ci]   -> BENCH_step.json"
-PYTHONPATH=src python benchmarks/bench_step.py --steps 4
+echo "[ci]   -> BENCH_step.json; gated against the committed snapshot:"
+echo "[ci]   >25% steps/s regression on any non-cluster record fails CI"
+PYTHONPATH=src python benchmarks/bench_step.py --steps 4 --compare BENCH_step.json
 
 echo "[ci] serve benchmark (CI-sized load; the committed BENCH_serve.json"
 echo "[ci]   is the 256-request run) -> BENCH_serve.json"

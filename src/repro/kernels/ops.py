@@ -18,9 +18,16 @@ import jax.numpy as jnp
 from repro.kernels import ref as R
 from repro.kernels.decode_attention import decode_attention as _decode_pallas
 from repro.kernels.decode_attention import (
+    decode_attention_int8 as _decode_int8_pallas,
+)
+from repro.kernels.decode_attention import (
     paged_decode_attention as _paged_decode_pallas,
 )
+from repro.kernels.decode_attention import (
+    paged_decode_attention_int8 as _paged_decode_int8_pallas,
+)
 from repro.kernels.flash_attention import flash_attention_fwd as _flash_pallas
+from repro.kernels.fused_moe import fused_moe_mlp_fwd as _fused_moe_pallas
 from repro.kernels.quantize import dequantize_int8 as _deq
 from repro.kernels.quantize import quantize_int8 as _quant_pallas
 from repro.kernels.rglru_scan import rglru_scan as _rglru_pallas
@@ -112,6 +119,101 @@ def paged_decode_attention(
     )
 
 
+def decode_attention_int8(
+    q: jax.Array, k: jax.Array, k_scale: jax.Array,
+    v: jax.Array, v_scale: jax.Array, valid_len: jax.Array,
+    *,
+    window: Optional[int] = None,
+    block_k: int = 512,
+    interpret: bool = False,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """Decode over an int8 KV cache (+ per-row f32 scales), dequantized
+    inside the kernel — the cache sweep moves ~4x fewer HBM bytes."""
+    if not use_kernel:
+        return R.decode_attention_int8_ref(
+            q, k, k_scale, v, v_scale, valid_len, window=window
+        )
+    return _decode_int8_pallas(
+        q, k, k_scale, v, v_scale, valid_len,
+        window=window, block_k=block_k, interpret=interpret,
+    )
+
+
+def paged_decode_attention_int8(
+    q: jax.Array, k_pages: jax.Array, k_scales: jax.Array,
+    v_pages: jax.Array, v_scales: jax.Array,
+    block_table: jax.Array, valid_len: jax.Array,
+    *,
+    window: Optional[int] = None,
+    interpret: bool = False,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """Paged decode over an int8 page pool; see :func:`decode_attention_int8`."""
+    if not use_kernel:
+        return R.paged_decode_attention_int8_ref(
+            q, k_pages, k_scales, v_pages, v_scales, block_table, valid_len,
+            window=window,
+        )
+    return _paged_decode_int8_pallas(
+        q, k_pages, k_scales, v_pages, v_scales, block_table, valid_len,
+        window=window, interpret=interpret,
+    )
+
+
+# ---------------------------------------------------------------------------
+# fused MoE dispatch + expert SwiGLU (differentiable)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+def _fused_moe(x, router, wg, wu, wo, k, capacity, block_c, interpret):
+    return _fused_moe_pallas(
+        x, router, wg, wu, wo,
+        k=k, capacity=capacity, block_c=block_c, interpret=interpret,
+    )
+
+
+def _fused_moe_fwd(x, router, wg, wu, wo, k, capacity, block_c, interpret):
+    out = _fused_moe(x, router, wg, wu, wo, k, capacity, block_c, interpret)
+    return out, (x, router, wg, wu, wo)
+
+
+def _fused_moe_bwd(k, capacity, block_c, interpret, res, g):
+    x, router, wg, wu, wo = res
+    # recompute through the oracle: re-derives routing + dispatch (cheap int
+    # ops) and the expert GEMM intermediates rather than saving E*C*f floats
+    _, vjp = jax.vjp(
+        lambda x_, r_, wg_, wu_, wo_: R.fused_moe_mlp_ref(
+            x_, r_, wg_, wu_, wo_, k=k, capacity=capacity
+        ),
+        x, router, wg, wu, wo,
+    )
+    return vjp(g)
+
+
+_fused_moe.defvjp(_fused_moe_fwd, _fused_moe_bwd)
+
+
+def fused_moe_mlp(
+    x: jax.Array,               # (T, d) tokens
+    router: jax.Array,          # (d, E)
+    wg: jax.Array, wu: jax.Array, wo: jax.Array,  # expert SwiGLU weights
+    *,
+    k: int,
+    capacity: int,
+    block_c: int = 128,
+    interpret: bool = False,
+    use_kernel: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused top-k MoE layer: routing stays in XLA, dispatch gather + capacity
+    mask + expert SwiGLU + gate scaling run in one Pallas kernel.  Returns
+    ``(out (T, d), aux_loss)``; backward recomputes through the oracle."""
+    if not use_kernel:
+        return R.fused_moe_mlp_ref(x, router, wg, wu, wo, k=k, capacity=capacity)
+    return _fused_moe(x, router, wg, wu, wo, k, capacity, block_c, interpret)
+
+
 # ---------------------------------------------------------------------------
 # RG-LRU scan (differentiable)
 # ---------------------------------------------------------------------------
@@ -188,12 +290,12 @@ def rwkv6_scan(
 
 def quantize_int8(
     x: jax.Array, noise: Optional[jax.Array] = None, *,
-    interpret: bool = False, use_kernel: bool = True,
+    block_rows: int = 256, interpret: bool = False, use_kernel: bool = True,
 ) -> Tuple[jax.Array, jax.Array]:
     """x: (R, N).  noise None => deterministic nearest rounding (oracle path)."""
     if noise is None or not use_kernel:
         return R.quantize_int8_ref(x, noise)
-    return _quant_pallas(x, noise, interpret=interpret)
+    return _quant_pallas(x, noise, block_rows=block_rows, interpret=interpret)
 
 
 dequantize_int8 = _deq

@@ -43,7 +43,12 @@ def quantize_int8(
     interpret: bool = False,
 ) -> Tuple[jax.Array, jax.Array]:
     R, N = x.shape
-    br = min(block_rows, R)
+    assert noise.shape == x.shape, (noise.shape, x.shape)
+    # pad-and-mask for any R: the row block is sublane-aligned (multiple of
+    # 8, so ragged R also compiles on TPU), rows pad with zeros — per-row
+    # scales mean padding never contaminates real rows — and the pad rows
+    # are sliced back off below.
+    br = min(block_rows, ((R + 7) // 8) * 8)
     pad = (-R) % br
     if pad:
         x = jnp.pad(x, ((0, pad), (0, 0)))

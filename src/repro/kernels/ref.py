@@ -94,6 +94,109 @@ def paged_decode_attention_ref(
     return decode_attention_ref(q, k, v, valid_len, window=window)
 
 
+def decode_attention_int8_ref(
+    q: jax.Array,               # (B, 1, H, D)
+    k: jax.Array,               # (B, Skv, Hkv, D) int8 cache
+    k_scale: jax.Array,         # (B, Skv, Hkv, 1) f32 per-row scales
+    v: jax.Array,               # (B, Skv, Hkv, D) int8
+    v_scale: jax.Array,         # (B, Skv, Hkv, 1) f32
+    valid_len: jax.Array,       # (B,) int32
+    *,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """Dequantize the int8 cache, then dense decode (the fused kernel's target)."""
+    kf = dequantize_int8_ref(k, k_scale, jnp.float32)
+    vf = dequantize_int8_ref(v, v_scale, jnp.float32)
+    return decode_attention_ref(q, kf, vf, valid_len, window=window)
+
+
+def paged_decode_attention_int8_ref(
+    q: jax.Array,               # (B, 1, H, D)
+    k_pages: jax.Array,         # (P, page_size, Hkv, D) int8
+    k_scales: jax.Array,        # (P, page_size, Hkv, 1) f32
+    v_pages: jax.Array,
+    v_scales: jax.Array,
+    block_table: jax.Array,     # (B, NP) int32
+    valid_len: jax.Array,       # (B,) int32
+    *,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """Gather int8 pages + scales, dequantize, then dense decode."""
+    B, NP = block_table.shape
+    page_size, Hkv, D = k_pages.shape[1:]
+    k = dequantize_int8_ref(
+        k_pages[block_table], k_scales[block_table], jnp.float32
+    ).reshape(B, NP * page_size, Hkv, D)
+    v = dequantize_int8_ref(
+        v_pages[block_table], v_scales[block_table], jnp.float32
+    ).reshape(B, NP * page_size, Hkv, D)
+    return decode_attention_ref(q, k, v, valid_len, window=window)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of experts
+# ---------------------------------------------------------------------------
+
+
+def fused_moe_mlp_ref(
+    x: jax.Array,               # (T, d) tokens
+    router: jax.Array,          # (d, E)
+    wg: jax.Array,              # (E, d, f) gate proj
+    wu: jax.Array,              # (E, d, f) up proj
+    wo: jax.Array,              # (E, f, d) down proj
+    *,
+    k: int,
+    capacity: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Capacity-layout top-k MoE with SwiGLU experts (Switch aux loss).
+
+    The mathematical definition of the fused dispatch+GEMM kernel: top-k
+    routing with renormalized gates, first-come-first-served capacity at
+    ``capacity`` slots per expert (overflow copies dropped), per-expert
+    SwiGLU, gate-weighted combine.  Returns ``(out (T, d), aux_loss)``.
+    """
+    T, d = x.shape
+    E = router.shape[1]
+    C = capacity
+
+    logits = (x @ router.astype(jnp.float32)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    tok_frac = jnp.mean(
+        jax.nn.one_hot(expert_ids, E, dtype=jnp.float32).sum(axis=1), axis=0
+    )
+    prob_frac = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(tok_frac * prob_frac)
+
+    flat_expert = expert_ids.reshape(-1)
+    flat_token = jnp.repeat(jnp.arange(T), k)
+    flat_gate = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_expert, stable=True)
+    se, st, sg = flat_expert[order], flat_token[order], flat_gate[order]
+
+    counts = jnp.bincount(flat_expert, length=E)
+    offsets = jnp.concatenate([jnp.zeros(1, counts.dtype), jnp.cumsum(counts)[:-1]])
+    pos_in_expert = jnp.arange(T * k) - offsets[se]
+    keep = pos_in_expert < C
+    slot = jnp.where(keep, se * C + pos_in_expert, E * C)
+
+    gathered = x[st] * keep[:, None].astype(x.dtype)
+    buf = jnp.zeros((E * C + 1, d), x.dtype).at[slot].set(gathered)[: E * C]
+    buf = buf.reshape(E, C, d)
+
+    g = jnp.einsum("ecd,edf->ecf", buf, wg)
+    u = jnp.einsum("ecd,edf->ecf", buf, wu)
+    h = jax.nn.silu(g) * u
+    y = jnp.einsum("ecf,efd->ecd", h, wo).reshape(E * C, d)
+
+    safe_slot = jnp.minimum(slot, E * C - 1)
+    gate_w = (sg * keep).astype(y.dtype)
+    out = jnp.zeros((T, d), y.dtype).at[st].add(y[safe_slot] * gate_w[:, None])
+    return out, aux.astype(jnp.float32)
+
+
 # ---------------------------------------------------------------------------
 # Linear recurrences
 # ---------------------------------------------------------------------------

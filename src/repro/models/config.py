@@ -33,6 +33,9 @@ class ModelConfig:
     experts_per_token: int = 0
     capacity_factor: float = 1.25
     router_aux_weight: float = 0.01
+    # fused Pallas dispatch+expert-GEMM kernel for the single-program path
+    # (the group-local EP path takes precedence under a >1 "model" mesh)
+    fused_moe: bool = True
 
     # hybrid / recurrent (RecurrentGemma)
     block_pattern: Tuple[str, ...] = ()   # cycle of "R" (recurrent) / "A" (attention)
@@ -55,6 +58,9 @@ class ModelConfig:
 
     # numerics / structure
     dtype: Any = jnp.float32
+    # "native" keeps the decode KV cache in `dtype`; "int8" stores per-row
+    # symmetric int8 + f32 scales and dequantizes inside the decode kernel
+    kv_cache_dtype: str = "native"
     remat: bool = True
     scan_layers: bool = True
     fsdp: bool = False                # ZeRO-3-style extra sharding over "data"

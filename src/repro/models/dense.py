@@ -134,6 +134,15 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype=None) -> PyTr
     dtype = dtype or cfg.dtype
     hd = cfg.resolved_head_dim()
     shape = (cfg.n_layers, batch, cache_len, cfg.n_kv_heads, hd)
+    if cfg.kv_cache_dtype == "int8":
+        # per-row symmetric int8 + f32 scale column: ~4x fewer KV-pool bytes
+        sshape = shape[:-1] + (1,)
+        return {
+            "k": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.zeros(sshape, jnp.float32),
+            "v": jnp.zeros(shape, jnp.int8),
+            "v_scale": jnp.zeros(sshape, jnp.float32),
+        }
     return {
         "k": jnp.zeros(shape, dtype),
         "v": jnp.zeros(shape, dtype),
@@ -142,6 +151,8 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype=None) -> PyTr
 
 def cache_logical_axes(cfg: ModelConfig) -> PyTree:
     ax = ("layers", "batch", "kv_seq", "act_kv_heads", None)
+    if cfg.kv_cache_dtype == "int8":
+        return {"k": ax, "k_scale": ax, "v": ax, "v_scale": ax}
     return {"k": ax, "v": ax}
 
 
@@ -170,6 +181,7 @@ def prefill(
             mrope_sections=(cfg.mrope_sections or None)
             if mrope_positions is not None else None,
             mrope_positions=mrope_positions,
+            kv_cache_dtype=cfg.kv_cache_dtype,
         )
         h = h + attn_out
         hn = L.rms_norm(lp["ln2"], h)
@@ -184,13 +196,12 @@ def prefill(
 
         x, cache = jax.lax.scan(step, x, params["blocks"])
     else:
-        ks, vs = [], []
+        kvs = []
         for i in range(cfg.n_layers):
             lp = jax.tree_util.tree_map(lambda a: a[i], params["blocks"])
             x, kv = body(lp, x)
-            ks.append(kv["k"])
-            vs.append(kv["v"])
-        cache = {"k": jnp.stack(ks), "v": jnp.stack(vs)}
+            kvs.append(kv)
+        cache = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *kvs)
     return _final(params, x[:, -1:], cfg), cache
 
 

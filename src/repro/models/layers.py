@@ -407,6 +407,7 @@ def attention_prefill(
     rotating: bool = False,
     mrope_sections: Optional[Tuple[int, ...]] = None,
     mrope_positions: Optional[jax.Array] = None,
+    kv_cache_dtype: str = "native",
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Prefill: run full attention AND return a KV cache padded to ``cache_len``.
 
@@ -414,6 +415,11 @@ def attention_prefill(
     ``min(S, cache_len)`` positions, aligned to slot 0 — the layout the
     rotating-window decode path expects.  Keys keep their absolute RoPE
     phases (RoPE is relative, so rolled slots stay exact).
+
+    ``kv_cache_dtype="int8"``: the returned cache stores per-row symmetric
+    int8 K/V + f32 scales (``k_scale``/``v_scale`` leaves); the decode path
+    dequantizes inside the kernel.  Attention over the prompt itself still
+    runs full-precision — only the cache is quantized.
     """
     q, k, v = qkv_project(p, x)
     if mrope_sections is not None:
@@ -429,10 +435,24 @@ def attention_prefill(
         v = v[:, S - cache_len:]
         S = cache_len
     pad = [(0, 0), (0, cache_len - S), (0, 0), (0, 0)]
-    cache = {
-        "k": wlc(jnp.pad(k, pad), "batch", "kv_seq", "act_kv_heads", None),
-        "v": wlc(jnp.pad(v, pad), "batch", "kv_seq", "act_kv_heads", None),
-    }
+    kc, vc = jnp.pad(k, pad), jnp.pad(v, pad)
+    if kv_cache_dtype == "int8":
+        # padded rows quantize against absmax 0 -> scale floor, q == 0
+        from repro.kernels import ref as KR
+
+        kq, ks = KR.quantize_int8_ref(kc)
+        vq, vs = KR.quantize_int8_ref(vc)
+        cache = {
+            "k": wlc(kq, "batch", "kv_seq", "act_kv_heads", None),
+            "k_scale": wlc(ks, "batch", "kv_seq", "act_kv_heads", None),
+            "v": wlc(vq, "batch", "kv_seq", "act_kv_heads", None),
+            "v_scale": wlc(vs, "batch", "kv_seq", "act_kv_heads", None),
+        }
+    else:
+        cache = {
+            "k": wlc(kc, "batch", "kv_seq", "act_kv_heads", None),
+            "v": wlc(vc, "batch", "kv_seq", "act_kv_heads", None),
+        }
     return out_project(p, o), cache
 
 
@@ -453,22 +473,49 @@ def attention_decode(
     RoPE always uses the ABSOLUTE ``pos`` (never the cache slot): RoPE is
     relative, so as long as every cached key kept its absolute phase, rolled
     rotating-window slots still attend at the true distances.
+
+    An int8 cache (``"k_scale"`` leaf present) is detected from the pytree:
+    the new row is quantized per-(batch, head) before the cache write and the
+    sweep dequantizes in-kernel (Pallas) or up-front (exact CPU path).
     """
     q, k, v = qkv_project(p, x)                       # (B,1,H,D) / (B,1,Hkv,D)
     if use_rope:
         q = apply_rope(q, pos[:, None], rope_theta)
         k = apply_rope(k, pos[:, None], rope_theta)
-    B = x.shape[0]
     idx = (pos if slot is None else slot).astype(jnp.int32)   # (B,) write row
-    ck = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(c, n, (i, 0, 0)))(
-        cache["k"], k[:, 0:1], idx
-    )
-    cv = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(c, n, (i, 0, 0)))(
-        cache["v"], v[:, 0:1], idx
-    )
-    ck = wlc(ck, "batch", "kv_seq", "act_kv_heads", None)
-    cv = wlc(cv, "batch", "kv_seq", "act_kv_heads", None)
     valid = (idx + 1) if valid_len is None else valid_len.astype(jnp.int32)
+    upd = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(c, n, (i, 0, 0)))
+    kv_axes = ("batch", "kv_seq", "act_kv_heads", None)
+
+    if "k_scale" in cache:
+        from repro.kernels import ref as KR
+
+        kq, ks_new = KR.quantize_int8_ref(k[:, 0:1])
+        vq, vs_new = KR.quantize_int8_ref(v[:, 0:1])
+        ck = wlc(upd(cache["k"], kq, idx), *kv_axes)
+        cks = wlc(upd(cache["k_scale"], ks_new, idx), *kv_axes)
+        cv = wlc(upd(cache["v"], vq, idx), *kv_axes)
+        cvs = wlc(upd(cache["v_scale"], vs_new, idx), *kv_axes)
+        if FLAGS.use_pallas:
+            from repro.kernels import ops as kops
+
+            o = kops.decode_attention_int8(
+                q, ck, cks, cv, cvs, valid,
+                window=window, interpret=FLAGS.pallas_interpret,
+            )
+        else:
+            o = _decode_sdpa_exact(
+                q,
+                KR.dequantize_int8_ref(ck, cks),
+                KR.dequantize_int8_ref(cv, cvs),
+                valid - 1, window,
+            )
+        return out_project(p, o), {
+            "k": ck, "k_scale": cks, "v": cv, "v_scale": cvs
+        }
+
+    ck = wlc(upd(cache["k"], k[:, 0:1], idx), *kv_axes)
+    cv = wlc(upd(cache["v"], v[:, 0:1], idx), *kv_axes)
     if FLAGS.use_pallas:
         from repro.kernels import ops as kops
 

@@ -44,9 +44,10 @@ def expert_capacity(n_tokens: int, n_experts: int, k: int, capacity_factor: floa
 
 
 # Dispatch implementation: "auto" picks the shard_map group-local path when a
-# mesh with a >1 "model" axis is active (the production EP path); "dense"
-# forces the single-program gather/scatter path (the GSPMD-auto baseline the
-# perf log measures against).  Env REPRO_MOE_IMPL overrides (perf A/B).
+# mesh with a >1 "model" axis is active (the production EP path), else the
+# fused Pallas dispatch+expert-GEMM kernel when cfg.fused_moe; "fused" /
+# "dense" force the single-program fused-kernel / gather-scatter paths (the
+# perf A/B baselines).  Env REPRO_MOE_IMPL overrides.
 import os as _os
 
 MOE_IMPL = _os.environ.get("REPRO_MOE_IMPL", "auto")
@@ -54,7 +55,8 @@ MOE_IMPL = _os.environ.get("REPRO_MOE_IMPL", "auto")
 
 def moe_mlp(p: Dict, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
     """x: (B, S, d) -> (out, aux_loss); dispatches on MOE_IMPL."""
-    if MOE_IMPL == "auto":
+    impl = MOE_IMPL
+    if impl == "auto":
         from repro.compat import get_abstract_mesh
 
         mesh = get_abstract_mesh()
@@ -64,7 +66,33 @@ def moe_mlp(p: Dict, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Arr
             and cfg.n_experts % mesh.shape["model"] == 0
         ):
             return _moe_mlp_local(p, x, cfg, mesh)
+        impl = "fused" if cfg.fused_moe else "dense"
+    if impl == "fused":
+        return _moe_mlp_fused(p, x, cfg)
     return _moe_mlp_dense(p, x, cfg)
+
+
+def _moe_mlp_fused(p: Dict, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """Single-program path through the fused Pallas kernel.
+
+    Same routing/capacity math as :func:`_moe_mlp_dense` (parity-tested, incl.
+    capacity overflow), but the dispatch gather, capacity masking, expert
+    SwiGLU, and gate scaling run in one kernel — the (T·k, d) token-copy
+    tensor and the g/u/h intermediates never round-trip HBM.  Backward
+    recomputes through the ref oracle (see kernels/ops.py).
+    """
+    from repro.kernels import ops as kops
+
+    B, S, d = x.shape
+    T = B * S
+    C = expert_capacity(T, cfg.n_experts, cfg.experts_per_token, cfg.capacity_factor)
+    out, aux = kops.fused_moe_mlp(
+        x.reshape(T, d), p["router"], p["wi_gate"], p["wi_up"], p["wo"],
+        k=cfg.experts_per_token, capacity=C,
+        interpret=L.FLAGS.pallas_interpret,
+    )
+    out = wlc(out.reshape(B, S, d), "batch", "seq", "act_embed")
+    return out, aux
 
 
 def _moe_mlp_local(
@@ -356,6 +384,7 @@ def prefill(params, cfg: ModelConfig, tokens, cache_len: int, **_):
         attn_out, kv = L.attention_prefill(
             lp["attn"], hn, positions=positions, cache_len=cache_len,
             causal=True, window=cfg.window, rope_theta=cfg.rope_theta,
+            kv_cache_dtype=cfg.kv_cache_dtype,
         )
         h = h + attn_out
         hn = L.rms_norm(lp["ln2"], h)
@@ -367,13 +396,12 @@ def prefill(params, cfg: ModelConfig, tokens, cache_len: int, **_):
     if cfg.scan_layers:
         x, cache = jax.lax.scan(lambda c, lp: fn(lp, c), x, params["blocks"])
     else:
-        ks, vs = [], []
+        kvs = []
         for i in range(cfg.n_layers):
             lp = jax.tree_util.tree_map(lambda a: a[i], params["blocks"])
             x, kv = fn(lp, x)
-            ks.append(kv["k"])
-            vs.append(kv["v"])
-        cache = {"k": jnp.stack(ks), "v": jnp.stack(vs)}
+            kvs.append(kv)
+        cache = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *kvs)
     from repro.models.dense import _final
 
     return _final(params, x[:, -1:], cfg), cache

@@ -21,6 +21,12 @@ training math.
 
 Quarantine is physical here: :meth:`FlashDevice.quarantine` unlinks the
 shard file (shreds the dead worker's flash) in addition to the tombstone.
+
+Spool width is pluggable (see :mod:`repro.storage.codec`): the default
+``i32`` layout writes 4 bytes/token; ``u8``/``u16``/``auto`` spool narrow
+integer ids (up to 4x fewer bytes at rest and through the mmap page reads)
+and the device widens back to int32 during ``_materialize`` — assembled
+batches are bit-identical across codecs AND backends.
 """
 from __future__ import annotations
 
@@ -31,6 +37,7 @@ from typing import Dict, Optional
 import numpy as np
 
 from repro.core.privacy import Shard
+from repro.storage.codec import decode_rows, encode_rows, resolve_codec
 from repro.storage.device import BaseStorageDevice
 from repro.storage.synthetic import synth_sequence
 
@@ -40,15 +47,18 @@ def _safe(name: str) -> str:
 
 
 class FlashDevice(BaseStorageDevice):
-    """File-backed backend: one ``int32 (n_samples, seq_len+1)`` memmap per
-    shard, spooled lazily, read via mmap pages."""
+    """File-backed backend: one ``(n_samples, seq_len+1)`` memmap per shard
+    (dtype per the spool codec), spooled lazily, read via mmap pages."""
 
     backend = "flash"
 
-    def __init__(self, worker: str, cfg, root: Optional[str] = None):
+    def __init__(self, worker: str, cfg, root: Optional[str] = None,
+                 codec: str = "i32"):
         super().__init__(worker, cfg)
         self.root = root or tempfile.mkdtemp(prefix="repro-flash-")
+        self.codec = resolve_codec(codec, cfg.vocab)
         self._maps: Dict[str, np.memmap] = {}
+        self.spooled_bytes = 0          # payload bytes THIS device wrote
 
     # -- layout -----------------------------------------------------------
 
@@ -57,20 +67,26 @@ class FlashDevice(BaseStorageDevice):
             home = os.path.join(self.root, f"dev-{_safe(shard.owner)}")
         else:
             home = os.path.join(self.root, "public")
-        return os.path.join(home, f"{_safe(shard.shard_id)}.i32")
+        # codec in the name: devices with different codecs never alias files
+        return os.path.join(home, f"{_safe(shard.shard_id)}.{self.codec}")
 
     def _spool(self, shard: Shard, path: str) -> None:
         """Write the shard's full sample matrix; atomic rename so a shared
         public file is never observed half-written."""
         os.makedirs(os.path.dirname(path), exist_ok=True)
         S = self.cfg.seq_len + 1
+        from repro.storage.codec import CODEC_DTYPES
+
+        dt = CODEC_DTYPES[self.codec]
         tmp = path + f".tmp-{os.getpid()}-{_safe(self.worker)}"
         arr = np.lib.format.open_memmap(
-            tmp, mode="w+", dtype=np.int32, shape=(shard.n_samples, S)
+            tmp, mode="w+", dtype=dt, shape=(shard.n_samples, S)
         )
         for i in range(shard.n_samples):
-            arr[i] = synth_sequence(self.cfg, shard.shard_id, i)
+            arr[i] = encode_rows(synth_sequence(self.cfg, shard.shard_id, i),
+                                 self.codec)
         arr.flush()
+        self.spooled_bytes += arr.nbytes
         del arr
         os.replace(tmp, path)
 
@@ -88,7 +104,8 @@ class FlashDevice(BaseStorageDevice):
 
     def _materialize(self, shard: Shard, index: int) -> np.ndarray:
         m = self._map(shard)
-        return np.asarray(m[index % m.shape[0]], np.int32)
+        # in-device widen: narrow spool bytes never leave the device raw
+        return decode_rows(m[index % m.shape[0]])
 
     def evict(self, shard_id: str) -> None:
         self._maps.pop(shard_id, None)

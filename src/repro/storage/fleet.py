@@ -52,18 +52,27 @@ class StorageSpec:
 
     ``root`` is the flash spool directory (a fresh tempdir when omitted);
     ``data_axis`` pins the meshfeed mesh's ``data`` axis (auto-sized to the
-    largest divisor of the global row count otherwise).
+    largest divisor of the global row count otherwise); ``codec`` is the
+    flash spool width (``i32`` legacy, ``u8``/``u16``/``auto`` narrow — see
+    :mod:`repro.storage.codec`; ignored by the in-memory backends).
     """
 
     backend: str = "synthetic"
     root: Optional[str] = None
     data_axis: Optional[int] = None
+    codec: str = "i32"
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
             raise ValueError(
                 f"unknown storage backend {self.backend!r}; "
                 f"choose from {sorted(BACKENDS)}"
+            )
+        from repro.storage.codec import CODECS
+
+        if self.codec not in CODECS:
+            raise ValueError(
+                f"unknown spool codec {self.codec!r}; choose from {CODECS}"
             )
 
 
@@ -189,7 +198,8 @@ class DeviceFleet:
     def _make_device(self, worker: str) -> BaseStorageDevice:
         klass = BACKENDS[self.spec.backend]
         if klass is FlashDevice:
-            return FlashDevice(worker, self.cfg, root=self._flash_root)
+            return FlashDevice(worker, self.cfg, root=self._flash_root,
+                               codec=self.spec.codec)
         return klass(worker, self.cfg)
 
     def provision_worker(self, worker: str) -> Optional[StorageDevice]:

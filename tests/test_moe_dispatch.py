@@ -71,6 +71,47 @@ def test_local_dispatch_matches_dense_forward_and_grad():
     assert "ERRS" in out
 
 
+def test_local_dispatch_matches_dense_under_capacity_overflow():
+    """Tokens ARE dropped: with capacity_factor=0.01 the per-expert capacity
+    floors at 8 slots for 512 token-copies.  On a pure model-parallel mesh
+    (n_groups == 1) the local path's per-group capacity equals the dense C,
+    so which copies drop — and hence the output — must match exactly."""
+    out = _run("""
+        import jax, jax.numpy as jnp
+        from repro.compat import make_mesh, set_mesh
+        from repro.configs import smoke_config
+        from repro.models import moe
+        from repro.models.api import get_model
+
+        cfg = smoke_config('qwen3-moe-30b-a3b').with_(capacity_factor=0.01)
+        assert moe.expert_capacity(256, cfg.n_experts, cfg.experts_per_token,
+                                   cfg.capacity_factor) == 8
+        m = get_model(cfg)
+        key = jax.random.PRNGKey(3)
+        params, _ = m.init_params(key=key)
+        tokens = jax.random.randint(key, (4, 64), 0, cfg.vocab)
+
+        moe.MOE_IMPL = 'dense'
+        ref, aux_ref = jax.jit(lambda p, t: m.forward(p, t))(params, tokens)
+        # sanity: drops really happen — uncapped output must differ
+        big = smoke_config('qwen3-moe-30b-a3b').with_(capacity_factor=8.0)
+        ref_big, _ = jax.jit(
+            lambda p, t: get_model(big).forward(p, t))(params, tokens)
+        assert float(jnp.max(jnp.abs(ref - ref_big))) > 1e-3
+
+        mesh = make_mesh((1, 4), ('data', 'model'))
+        moe.MOE_IMPL = 'auto'
+        with set_mesh(mesh):
+            out, aux = jax.jit(lambda p, t: m.forward(p, t))(params, tokens)
+        ferr = float(jnp.max(jnp.abs(out - ref)))
+        aerr = float(jnp.abs(aux - aux_ref))
+        print('ERRS', ferr, aerr)
+        assert ferr < 5e-4, ferr
+        assert aerr < 1e-6, aerr
+    """)
+    assert "ERRS" in out
+
+
 def test_local_dispatch_over_model_batch_layout():
     """The DP-attention layout (batch sharded over model too): the explicit
     all-gather + psum_scatter path must also match."""

@@ -102,6 +102,70 @@ def test_flash_synthetic_bit_identity_property(seed, shard, index, tmp_path_fact
     )
 
 
+# ---------------------------------------------------------------------------
+# spool codecs: narrow bytes at rest, identical samples out
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("codec,itemsize", [("i32", 4), ("u16", 2),
+                                            ("u8", 1), ("auto", 1)])
+def test_flash_codec_bit_identity_and_spool_bytes(codec, itemsize, tmp_path):
+    """Every codec returns bit-identical samples to synthetic, and the bytes
+    written to flash shrink with the width (auto resolves to u8 at vocab 128)."""
+    from repro.storage.codec import bytes_per_sample
+
+    sh = Shard("s", 5, False)
+    syn = SyntheticDevice("w", CFG)
+    syn.provision([sh])
+    fl = FlashDevice("w", CFG, root=str(tmp_path), codec=codec)
+    fl.provision([sh])
+    for i in range(5):
+        np.testing.assert_array_equal(syn.read("s", i), fl.read("s", i))
+    assert fl.spooled_bytes == 5 * bytes_per_sample(fl.codec, CFG.seq_len)
+    assert fl.spooled_bytes == 5 * (CFG.seq_len + 1) * itemsize
+
+
+def test_flash_codec_too_narrow_refused(tmp_path):
+    """u8 cannot hold vocab 1024 losslessly — construction must refuse
+    rather than ever rounding ids."""
+    big = DataConfig(vocab=1024, seq_len=8, seed=3)
+    with pytest.raises(ValueError, match="lossless"):
+        FlashDevice("w", big, root=str(tmp_path), codec="u8")
+    # auto degrades to a width that fits instead of failing
+    assert FlashDevice("w", big, root=str(tmp_path), codec="auto").codec == "u16"
+
+
+def test_flash_codecs_never_alias_files(tmp_path):
+    """Two devices with different codecs over the same root must not read
+    each other's layouts: codec-tagged filenames keep them disjoint."""
+    sh = Shard("s", 3, False)
+    a = FlashDevice("w", CFG, root=str(tmp_path), codec="i32")
+    b = FlashDevice("w", CFG, root=str(tmp_path), codec="u8")
+    for d in (a, b):
+        d.provision([sh])
+        d.read("s", 0)
+    names = sorted(os.listdir(os.path.join(str(tmp_path), "public")))
+    assert names == ["s.i32", "s.u8"]
+    np.testing.assert_array_equal(a.read("s", 1), b.read("s", 1))
+
+
+def test_storage_spec_rejects_unknown_codec():
+    with pytest.raises(ValueError):
+        StorageSpec(backend="flash", codec="int8")
+
+
+def test_fleet_codec_flows_to_devices(tmp_path):
+    spec = StorageSpec(backend="flash", root=str(tmp_path / "sp"), codec="auto")
+    fleet = DeviceFleet.provision(
+        ["w0"], [Shard("pub", 4, False)], CFG, spec=spec
+    )
+    dev = fleet.device("w0")
+    assert dev.codec == "u8"                     # vocab 128 fits one byte
+    np.testing.assert_array_equal(
+        dev.read("pub", 2), synth_sequence(CFG, "pub", 2)
+    )
+
+
 @pytest.mark.parametrize("backend", sorted(BACKENDS))
 def test_batcher_output_identical_across_backends(backend, tmp_path):
     """The training math must not depend on the storage medium."""
