@@ -39,14 +39,15 @@ echo "[ci]   ShardingPlan (explicit in_shardings, not GSPMD defaults)"
 XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     PYTHONPATH=src python benchmarks/session_smoke.py --backend meshfeed
 
-echo "[ci] cluster smoke (2 worker PROCESSES x 4 fake devices each):"
+echo "[ci] cluster smoke (4 worker PROCESSES x 2 fake devices each):"
 echo "[ci]   asserts every process device_put only ADDRESSABLE shards of"
 echo "[ci]   the global mesh (byte-exact receipts, no cross-host batch"
-echo "[ci]   bytes), compile_count stays 1 across a drift re-tune, and"
-echo "[ci]   save-at-2-processes/restore-at-1-process matches the"
-echo "[ci]   single-process loss curve (each worker sets its own"
-echo "[ci]   XLA_FLAGS=--xla_force_host_platform_device_count=4)"
-PYTHONPATH=src python benchmarks/cluster_smoke.py
+echo "[ci]   bytes), compile_count stays 1 across a drift re-tune,"
+echo "[ci]   save-at-4-processes/restore-at-1-process matches the"
+echo "[ci]   single-process loss curve, and the int8 RING transport keeps"
+echo "[ci]   all 4 replicas bit-identical while tracking the uncompressed"
+echo "[ci]   loss (each worker sets its own XLA_FLAGS device count)"
+PYTHONPATH=src python benchmarks/cluster_smoke.py --processes 4
 
 echo "[ci] serve smoke (continuous batching): asserts a request admitted"
 echo "[ci]   mid-decode streams before the first finishes with unchanged"
@@ -54,9 +55,13 @@ echo "[ci]   outputs, prefix-cache hits are bit-identical to cold prefill,"
 echo "[ci]   and per-request events stream in order (dense + rwkv6)"
 PYTHONPATH=src python benchmarks/serve_smoke.py
 
-echo "[ci] step benchmark (8-device CPU mesh + 2-process cluster record)"
+echo "[ci] step benchmark (8-device CPU mesh + 2-process cluster records:"
+echo "[ci]   star/uncompressed baseline and the int8 ring transport)"
 echo "[ci]   -> BENCH_step.json; gated against the committed snapshot:"
-echo "[ci]   >25% steps/s regression on any non-cluster record fails CI"
+echo "[ci]   >25% steps/s regression on any single-process record fails"
+echo "[ci]   CI; cluster records gate at the looser 50% (barrier noise)."
+echo "[ci]   The committed {1,2,4,8}-process scaling curve regenerates"
+echo "[ci]   with --scaling (too slow for per-commit CI)."
 PYTHONPATH=src python benchmarks/bench_step.py --steps 4 --compare BENCH_step.json
 
 echo "[ci] serve benchmark (CI-sized load; the committed BENCH_serve.json"

@@ -141,6 +141,15 @@ class FleetSpec:
         still on the default ``synthetic`` backend is upgraded to
         ``meshfeed``; an explicit host-delivery choice is left for
         ``Session`` to reject with a clear error.
+
+        The gradient-reduction wire is configured by ``transport=`` — a
+        :class:`~repro.core.topology.TransportSpec` (or kwargs dict):
+        compression (``"int8"``/``"topk"`` with error feedback), bucket
+        overlap, and star vs peer-to-peer ring topology.
+        ``TransportSpec.production()`` is the tuned preset:
+
+            FleetSpec.demo(3).with_cluster(
+                processes=2, transport=TransportSpec.production())
         """
         storage = self.storage
         if storage.backend == "synthetic":

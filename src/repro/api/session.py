@@ -86,8 +86,8 @@ from repro.launch.mesh import ClusterContext, make_single_mesh
 from repro.optim.optimizers import Optimizer
 from repro.optim.schedules import goyal_schedule
 from repro.train.steps import (
-    abstract_train_state, build_sharding_plan, make_apply_step,
-    make_partial_grad_step, make_train_step,
+    abstract_train_state, build_sharding_plan, make_bucketed_apply_step,
+    make_bucketed_grad_step, make_train_step, plan_buckets,
 )
 
 PyTree = Any
@@ -523,57 +523,94 @@ class Session:
             )
         return self._artifacts["compile"]
 
+    def _transport_spec(self):
+        """The TransportSpec in force: the attached context's (set by the
+        worker CLI) wins; the FleetSpec's ClusterSpec is the fallback."""
+        from repro.core.topology import TransportSpec
+
+        if self._cluster is not None and self._cluster.transport_spec is not None:
+            return self._cluster.transport_spec
+        if self.fleet.cluster is not None:
+            return self.fleet.cluster.transport
+        return TransportSpec()
+
     def _compile_hostsync(self, sched):
         """The cluster step for backends that cannot run cross-process XLA
         programs: a jitted partial-gradient half over this process's local
-        plan, a host allreduce through the coordinator, and a jitted apply
-        half — one ``step_fn`` with the standard signature.  Numerically
-        the single-program step (see :func:`make_partial_grad_step`);
-        counts as ONE compile (the no-recompile probe spans both halves).
+        plan emitting per-bucket flat f32 vectors, a
+        :class:`~repro.launch.transport.GradReducer` round (compression /
+        overlap / star-or-ring per the :class:`TransportSpec`), and a
+        jitted apply half that unflattens inside the step — one ``step_fn``
+        with the standard signature.  Numerically the single-program step
+        (see :func:`make_partial_grad_step`); counts as ONE compile (the
+        no-recompile probe spans both halves).
         """
+        from repro.launch.transport import GradReducer, StarTransport
+
         lp = self._local_plan
         ctx = self._cluster
-        grad_step = make_partial_grad_step(
-            self.model, aux_weight=self.config.aux_weight
+        tspec = self._transport_spec()
+        params_abs, _ = self.model.init_params(abstract=True)
+        groups = plan_buckets(params_abs, tspec.buckets)
+        grad_step = make_bucketed_grad_step(
+            self.model, groups, aux_weight=self.config.aux_weight
         )
-        apply_step = make_apply_step(
-            self.optimizer, sched, aux_weight=self.config.aux_weight
+        apply_step = make_bucketed_apply_step(
+            self.optimizer, sched, params_abs, groups,
+            aux_weight=self.config.aux_weight,
         )
 
         def grad_in_mesh(params, batch):
             with use_rules(lp.rules), compat_set_mesh(lp.mesh):
                 return grad_step(params, batch)
 
-        def apply_in_mesh(params, opt_state, grads, sums):
+        def apply_in_mesh(params, opt_state, bucket_vecs, sums):
             with use_rules(lp.rules), compat_set_mesh(lp.mesh):
-                return apply_step(params, opt_state, grads, sums)
+                return apply_step(params, opt_state, bucket_vecs, sums)
 
+        vec_sh = tuple(lp.replicated for _ in groups)
         jit_grad = jax.jit(
             grad_in_mesh,
             in_shardings=(lp.params, lp.batch),
-            out_shardings=(lp.params, lp.replicated),
+            out_shardings=(vec_sh, lp.replicated),
         )
+        # explicit in_shardings matter: the reduced buckets come back as
+        # numpy arrays, and jit without placement hints pays a slow
+        # host-layout probe on every call (measured ~60ms vs ~4ms/step)
         jit_apply = jax.jit(
             apply_in_mesh,
-            in_shardings=(lp.params, lp.opt, lp.params, lp.replicated),
+            in_shardings=(lp.params, lp.opt, vec_sh, lp.replicated),
             out_shardings=(lp.params, lp.opt, lp.replicated),
             donate_argnums=(0, 1),
         )
+        reducer = None
+        if ctx.sync is not None:
+            # cached on the context so error-feedback residuals (and the
+            # ring's sockets) survive recompiles
+            reducer = ctx.grad_reducer
+            if reducer is None:
+                wire = ctx.transport or StarTransport(ctx.sync)
+                reducer = GradReducer(
+                    wire, tspec, ctx.process_id, ctx.n_processes
+                )
+                ctx.grad_reducer = reducer
         counter = iter(range(1 << 62))
 
         def step_fn(params, opt_state, batch):
-            grads, sums = jit_grad(params, batch)
-            if ctx.sync is not None:
-                host = jax.tree_util.tree_map(
-                    lambda x: np.asarray(jax.device_get(x)), (grads, sums)
+            vecs, sums = jit_grad(params, batch)
+            if reducer is not None:
+                host_vecs = [np.asarray(jax.device_get(v)) for v in vecs]
+                host_sums = jax.tree_util.tree_map(
+                    lambda x: np.asarray(jax.device_get(x)), sums
                 )
-                # deterministic sum at the coordinator: every process gets
+                # deterministic pid-ordered reduction: every process gets
                 # identical totals, applies the identical update, and the
-                # replicas stay synchronized without a broadcast
-                grads, sums = ctx.sync.allreduce(
-                    f"step/{next(counter)}", host
+                # replicas stay bit-synchronized without a broadcast
+                red_vecs, sums = reducer.reduce(
+                    f"step/{next(counter)}", host_vecs, host_sums
                 )
-            return jit_apply(params, opt_state, grads, sums)
+                vecs = tuple(red_vecs)
+            return jit_apply(params, opt_state, vecs, sums)
 
         in_sh = (lp.params, lp.opt, lp.batch)
         out_sh = (lp.params, lp.opt, lp.replicated)

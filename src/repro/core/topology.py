@@ -236,19 +236,6 @@ def fleet_throughput(
     return total / t if t > 0 and not math.isinf(t) else 0.0
 
 
-def fleet_throughput(
-    fleet: Fleet,
-    batches: Dict[str, int],
-    n_params: int,
-    bytes_per_param: int = 4,
-    overlap: float = 0.0,
-) -> float:
-    """Aggregate samples/s for one synchronous step (paper Fig. 6 y-axis)."""
-    t = distributed_step_time(fleet, batches, n_params, bytes_per_param, overlap)
-    total = sum(c.count * batches.get(c.name, 0) for c in fleet.classes)
-    return total / t if t > 0 and not math.isinf(t) else 0.0
-
-
 # ---------------------------------------------------------------------------
 # Cluster process topology
 # ---------------------------------------------------------------------------
@@ -309,6 +296,63 @@ class ProcessMap:
 
 
 @dataclasses.dataclass(frozen=True)
+class TransportSpec:
+    """Gradient-reduction transport knobs for hostsync cluster execution.
+
+    Three independently toggleable optimizations (all default off, so the
+    default spec reproduces the classic full-f32 star reduction):
+
+    * ``compression`` — ``"int8"`` per-chunk symmetric quantization
+      (:mod:`repro.kernels.quantize`, deterministic round-half-up) or
+      ``"topk"`` magnitude sparsification (``topk_ratio`` of entries kept).
+      Both keep a per-host *error-feedback* residual so the dropped mass
+      re-enters later steps; every worker decodes every peer's payload and
+      sums in process-id order, so replicas stay bit-identical.
+    * ``overlap`` — split the grad pytree into ``buckets`` flat f32 vectors
+      and pipeline bucket *i*'s encode/reduce (background thread, double
+      buffered) with bucket *i+1*'s compute.
+    * ``topology`` — ``"ring"`` peer-to-peer allgather (workers listen on
+      their own sockets; the coordinator is demoted to rendezvous +
+      membership) or the ``"star"`` coordinator fallback.
+
+    ``timeout`` bounds every blocking wire wait; a silent peer raises
+    ``SyncPeerLost`` instead of hanging the step.
+    """
+
+    compression: str = "none"       # "none" | "int8" | "topk"
+    topk_ratio: float = 0.01        # fraction of entries kept when "topk"
+    chunk: int = 512                # int8 quantization chunk (one scale each)
+    buckets: int = 1                # grad pytree split into this many vectors
+    overlap: bool = False           # pipeline reduce(i) with compute(i+1)
+    topology: str = "star"          # "star" | "ring"
+    timeout: float = 120.0          # seconds before a wire wait raises
+
+    def __post_init__(self):
+        if self.compression not in ("none", "int8", "topk"):
+            raise ValueError(f"unknown compression {self.compression!r}")
+        if self.topology not in ("star", "ring"):
+            raise ValueError(f"unknown topology {self.topology!r}")
+        if self.buckets < 1:
+            raise ValueError(f"buckets must be >= 1, got {self.buckets}")
+        if not 0.0 < self.topk_ratio <= 1.0:
+            raise ValueError(f"topk_ratio must be in (0, 1], got {self.topk_ratio}")
+        if self.chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {self.chunk}")
+        if self.timeout <= 0:
+            raise ValueError(f"timeout must be > 0, got {self.timeout}")
+
+    @classmethod
+    def production(cls, **overrides) -> "TransportSpec":
+        """The all-optimizations-on preset used by benches and smoke rigs."""
+        kw = dict(compression="int8", buckets=2, overlap=True, topology="ring")
+        kw.update(overrides)
+        return cls(**kw)
+
+    def to_dict(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
 class ClusterSpec:
     """Declarative multi-process execution: how many worker processes, and
     how they find each other.  Carried by ``FleetSpec.with_cluster`` so one
@@ -319,7 +363,11 @@ class ClusterSpec:
     ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).  Ports of 0
     auto-pick free ones at launch.  ``membership_dir`` is where worker
     heartbeats land for the :class:`~repro.api.membership.MembershipWatcher`
-    (a fresh tempdir when omitted).
+    (a fresh tempdir when omitted).  ``transport`` selects the gradient
+    reduction path (see :class:`TransportSpec`).  ``compile_cache_dir``
+    points every worker at a shared persistent XLA compilation cache
+    (``None`` = a stable per-user tempdir; repeated launches of the same
+    shapes skip recompiles).
     """
 
     processes: int = 1
@@ -328,9 +376,13 @@ class ClusterSpec:
     sync_port: int = 0
     membership_dir: Optional[str] = None
     heartbeat_interval: float = 0.25
+    transport: TransportSpec = dataclasses.field(default_factory=TransportSpec)
+    compile_cache_dir: Optional[str] = None
 
     def __post_init__(self):
         if self.processes < 1:
             raise ValueError(
                 f"cluster needs >= 1 process, got {self.processes}"
             )
+        if isinstance(self.transport, dict):
+            object.__setattr__(self, "transport", TransportSpec(**self.transport))

@@ -76,3 +76,47 @@ def quantize_int8(
 
 def dequantize_int8(q: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
     return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flat-vector form — the cluster gradient transport's unit of work
+# ---------------------------------------------------------------------------
+#
+# The host transport ships grads as flat f32 vectors (one per layer bucket).
+# ``quantize_flat`` reshapes a vector into (ceil(n/chunk), chunk) rows so the
+# per-row kernel above gives one scale per ``chunk`` contiguous elements.
+# Rounding is the deterministic round-half-up (constant noise 0.5): every
+# worker quantizes its OWN contribution once and every peer decodes the same
+# int8 bytes, so determinism across replicas costs nothing; the quantization
+# bias is absorbed by the caller's error-feedback residual.
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def _quantize_flat_jit(vec: jax.Array, chunk: int, interpret: bool):
+    n = vec.shape[0]
+    rows = -(-n // chunk)
+    pad = rows * chunk - n
+    mat = jnp.pad(vec.astype(jnp.float32), (0, pad)).reshape(rows, chunk)
+    noise = jnp.full((rows, chunk), 0.5, jnp.float32)
+    return quantize_int8(mat, noise, interpret=interpret)
+
+
+def quantize_flat(
+    vec: jax.Array,
+    *,
+    chunk: int = 512,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Quantize a flat f32 vector to (q int8 (rows, chunk), scale f32 (rows, 1))."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    return _quantize_flat_jit(jnp.asarray(vec), chunk, interpret)
+
+
+def dequantize_flat(q, scale, size: int):
+    """Numpy-side inverse of :func:`quantize_flat` (peers decode on host)."""
+    import numpy as np
+
+    q = np.asarray(q)
+    scale = np.asarray(scale, dtype=np.float32)
+    return (q.astype(np.float32) * scale).reshape(-1)[:size]

@@ -55,10 +55,13 @@ import sys
 import tempfile
 import threading
 import time
-from multiprocessing import connection
+from multiprocessing import AuthenticationError, connection
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
-from repro.core.topology import ClusterSpec, ProcessMap
+from repro.core.topology import ClusterSpec, ProcessMap, TransportSpec
+from repro.launch.transport import (  # noqa: F401  (SyncPeerLost re-exported)
+    SyncPeerLost, build_wire_transport,
+)
 
 _AUTHKEY = b"repro-cluster-sync"
 
@@ -78,10 +81,6 @@ def _tree_add(a, b):
     )
 
 
-class SyncPeerLost(RuntimeError):
-    """A peer process died mid-round; the cluster step cannot complete."""
-
-
 # ---------------------------------------------------------------------------
 # Coordinator-side sync service + worker-side client
 # ---------------------------------------------------------------------------
@@ -93,7 +92,9 @@ class SyncServer:
     One TCP listener; every worker connects once and issues blocking
     rounds: ``allreduce`` (tree-sum of numpy pytrees, accumulated in
     process-id order so every participant receives the bit-identical
-    total — replicas stay synchronized without a broadcast) and
+    total — replicas stay synchronized without a broadcast),
+    ``allgather`` (every participant receives the pid-ordered list of all
+    payloads — the compressed transport decodes and sums client-side), and
     ``barrier``.  A participant dying mid-round poisons the round: the
     survivors get :class:`SyncPeerLost` instead of a silent hang.
     """
@@ -101,8 +102,12 @@ class SyncServer:
     def __init__(self, n_processes: int, port: Optional[int] = None):
         self.n = int(n_processes)
         self.port = port or _free_port()
+        # backlog must cover every worker dialing at once: the default (1)
+        # drops simultaneous SYNs and the kernel's retransmission backoff
+        # can stall a client past the rendezvous window on a loaded host
         self._listener = connection.Listener(
-            ("127.0.0.1", self.port), authkey=_AUTHKEY
+            ("127.0.0.1", self.port), authkey=_AUTHKEY,
+            backlog=max(16, self.n + 4),
         )
         self._lock = threading.Condition()
         self._rounds: Dict[Tuple[str, str], Dict[str, Any]] = {}
@@ -126,6 +131,8 @@ class SyncServer:
                 target=self._serve_one, args=(conn,), daemon=True
             )
             t.start()
+            # reap finished handlers so long runs don't accumulate them
+            self._threads = [x for x in self._threads if x.is_alive()]
             self._threads.append(t)
 
     def _serve_one(self, conn):
@@ -137,7 +144,7 @@ class SyncServer:
             while True:
                 msg = conn.recv()
                 op, tag = msg["op"], msg["tag"]
-                if op in ("allreduce", "barrier"):
+                if op in ("allreduce", "allgather", "barrier"):
                     result = self._join_round(
                         op, tag, pid, msg.get("payload")
                     )
@@ -148,8 +155,10 @@ class SyncServer:
                         self._lock.notify_all()
                     conn.send({"ok": True})
                 elif op == "get":
+                    # retire on read: kv is single-consumer rendezvous
+                    # state, and keeping every tag alive leaks memory
                     with self._lock:
-                        slot = self._rounds.get(("kv", tag))
+                        slot = self._rounds.pop(("kv", tag), None)
                     conn.send({"ok": True, "value":
                                None if slot is None else slot["value"]})
                 else:
@@ -177,6 +186,7 @@ class SyncServer:
 
     def _join_round(self, op: str, tag: str, pid: int, payload):
         key = (op, tag)
+        parts = None
         with self._lock:
             round_ = self._rounds.setdefault(key, {"got": {}, "done": False})
             round_["got"][pid] = payload
@@ -191,15 +201,34 @@ class SyncServer:
                 )
                 round_["done"] = True
                 self._lock.notify_all()
-            if not round_["done"] and set(range(self.n)) <= set(round_["got"]):
+            complete = (
+                not round_["done"]
+                and not round_.get("summing")
+                and set(range(self.n)) <= set(round_["got"])
+            )
+            if complete:
                 if op == "allreduce":
-                    total = None
-                    for p in sorted(round_["got"]):
-                        total = (round_["got"][p] if total is None
-                                 else _tree_add(total, round_["got"][p]))
-                    round_["result"] = total
+                    # the tree-sum happens OUTSIDE the lock (below): on
+                    # large grad payloads it would otherwise serialize
+                    # every other connection's round for its duration
+                    round_["summing"] = True
+                    parts = [round_["got"][p] for p in sorted(round_["got"])]
+                else:
+                    if op == "allgather":
+                        round_["result"] = [
+                            round_["got"][p] for p in sorted(round_["got"])
+                        ]
+                    round_["done"] = True
+                    self._lock.notify_all()
+        if parts is not None:
+            total = parts[0]
+            for part in parts[1:]:  # pid order — bit-identical everywhere
+                total = _tree_add(total, part)
+            with self._lock:
+                round_["result"] = total
                 round_["done"] = True
                 self._lock.notify_all()
+        with self._lock:
             while not round_["done"]:
                 self._lock.wait(timeout=0.5)
             resp = (
@@ -221,25 +250,63 @@ class SyncServer:
 
 
 class SyncClient:
-    """Worker-side handle to the coordinator's :class:`SyncServer`."""
+    """Worker-side handle to the coordinator's :class:`SyncServer`.
 
-    def __init__(self, address: str, process_id: int):
+    ``timeout`` bounds every round-trip: a coordinator that dies mid-round
+    (or a round stalled on a hung peer) raises :class:`SyncPeerLost`
+    instead of blocking the worker forever on a bare ``recv()``.
+    """
+
+    def __init__(self, address: str, process_id: int, *,
+                 timeout: float = 120.0):
         host, port = address.rsplit(":", 1)
         self.process_id = int(process_id)
-        self._conn = connection.Client(
-            (host, int(port)), authkey=_AUTHKEY
-        )
+        self.timeout = float(timeout)
+        self._conn = self._dial(host, int(port))
         self._lock = threading.Lock()
         self._conn.send({"pid": self.process_id})
+        if not self._conn.poll(self.timeout):
+            raise SyncPeerLost(
+                f"coordinator never answered the handshake "
+                f"within {self.timeout}s"
+            )
         hello = self._conn.recv()
         if not hello.get("ok"):
             raise RuntimeError(f"sync handshake failed: {hello}")
         self.n_processes = int(hello["n"])
 
+    def _dial(self, host: str, port: int):
+        # Workers all dial at startup; on an oversubscribed host a connect
+        # (or its auth challenge) can be refused or reset while the
+        # coordinator's accept loop is starved, so retry under the timeout
+        # instead of failing on the first attempt.
+        deadline = time.monotonic() + self.timeout
+        while True:
+            try:
+                return connection.Client((host, port), authkey=_AUTHKEY)
+            except (ConnectionError, OSError, AuthenticationError) as exc:
+                if time.monotonic() > deadline:
+                    raise SyncPeerLost(
+                        f"could not reach coordinator at {host}:{port} "
+                        f"within {self.timeout}s: {exc}"
+                    ) from exc
+                time.sleep(0.2)
+
     def _request(self, op: str, tag: str, payload=None):
         with self._lock:
-            self._conn.send({"op": op, "tag": tag, "payload": payload})
-            resp = self._conn.recv()
+            try:
+                self._conn.send({"op": op, "tag": tag, "payload": payload})
+                if not self._conn.poll(self.timeout):
+                    raise SyncPeerLost(
+                        f"coordinator silent for {self.timeout}s "
+                        f"(op={op!r}, tag={tag!r})"
+                    )
+                resp = self._conn.recv()
+            except (EOFError, ConnectionError, OSError) as exc:
+                raise SyncPeerLost(
+                    f"coordinator connection lost (op={op!r}, "
+                    f"tag={tag!r}): {exc}"
+                ) from exc
         if "error" in resp:
             raise SyncPeerLost(resp["error"])
         return resp.get("result") if op != "get" else resp.get("value")
@@ -247,6 +314,10 @@ class SyncClient:
     def allreduce(self, tag: str, tree):
         """Sum ``tree`` (numpy pytree) across all live processes."""
         return self._request("allreduce", tag, tree)
+
+    def allgather(self, tag: str, payload) -> list:
+        """Collect every process's payload, ordered by process id."""
+        return self._request("allgather", tag, payload)
 
     def barrier(self, tag: str) -> None:
         self._request("barrier", tag)
@@ -279,6 +350,30 @@ def _resolve_factory(spec: str) -> Callable:
     return getattr(importlib.import_module(mod), fn)
 
 
+def _steady_steps_per_s(history, warmup: int = 2) -> float:
+    """steps/s over post-warmup steps (per-step wall times from history)."""
+    times = [h["step_time"] for h in history if "step_time" in h]
+    if not times:
+        return 0.0
+    if len(times) > warmup + 1:
+        times = times[warmup:]
+    total = sum(times)
+    return round(len(times) / total, 3) if total > 0 else 0.0
+
+
+def _params_digest(params) -> str:
+    """sha256 over the param leaves' bytes, leaf order = tree order."""
+    import hashlib
+
+    import jax
+    import numpy as np
+
+    h = hashlib.sha256()
+    for leaf in jax.tree_util.tree_leaves(params):
+        h.update(np.ascontiguousarray(jax.device_get(leaf)).tobytes())
+    return h.hexdigest()[:16]
+
+
 @dataclasses.dataclass
 class WorkerRuntime:
     """One worker process's lifecycle: handshake -> session -> train.
@@ -299,6 +394,8 @@ class WorkerRuntime:
     factory: str
     factory_kwargs: Dict[str, Any]
     heartbeat_interval: float = 0.25
+    transport: Optional[Dict[str, Any]] = None   # TransportSpec kwargs
+    compile_cache_dir: Optional[str] = None
 
     def run(self, resume_steps: int = 2) -> Dict[str, Any]:
         from repro.compat import distributed_initialize
@@ -316,14 +413,30 @@ class WorkerRuntime:
                 )
         import jax
 
+        if self.compile_cache_dir:
+            # shared persistent XLA cache: re-launches of the same shapes
+            # (CI smokes, bench sweeps, respawned workers) skip the compile
+            try:
+                jax.config.update(
+                    "jax_compilation_cache_dir", self.compile_cache_dir
+                )
+            except Exception:
+                pass
+
+        tspec = TransportSpec(**(self.transport or {}))
         sync = (
-            SyncClient(self.sync_address, self.process_id)
+            SyncClient(self.sync_address, self.process_id,
+                       timeout=tspec.timeout)
             if self.sync_address and self.num_processes > 1 else None
+        )
+        wire = build_wire_transport(
+            tspec, sync, self.process_id, self.num_processes
         )
         session = _resolve_factory(self.factory)(**self.factory_kwargs)
         ctx = ClusterContext.detect(
             self.process_id, self.num_processes, sync=sync,
             member=f"proc-{self.process_id}",
+            transport=wire, transport_spec=tspec,
         )
         if self.num_processes > 1:
             session.attach_cluster(ctx)
@@ -349,6 +462,10 @@ class WorkerRuntime:
         finally:
             if beat is not None:
                 beat.stop()
+            if ctx.grad_reducer is not None:
+                ctx.grad_reducer.close()      # also closes the wire
+            elif wire is not None:
+                wire.close()
             if sync is not None:
                 sync.close()
         return record
@@ -381,17 +498,20 @@ class WorkerRuntime:
         #    checkpoint when one is configured: every process restores the
         #    identical state onto its plan) --
         resumed_losses: List[float] = []
+        final_report = report
         if resume_steps > 0:
             report2 = session.run(
                 report.params, opt_state=report.opt_state,
                 steps=session.config.total_steps + resume_steps,
             )
             resumed_losses = [h["loss"] for h in report2.history]
+            final_report = report2
 
         chunked_ok = None
         if ctx.sync is not None and ctx.mode == "hostsync":
             chunked_ok = self._check_chunked_save(session, ctx, jax)
 
+        reducer = ctx.grad_reducer
         return {
             "process": self.process_id,
             "n_processes": self.num_processes,
@@ -400,10 +520,22 @@ class WorkerRuntime:
             "local_devices": len(local_ids),
             "losses": [h["loss"] for h in report.history],
             "resumed_losses": resumed_losses,
-            "steps_per_s": (
+            # steady-state rate: first-call jit compiles dominate short
+            # runs, so skip the warmup steps when enough history exists
+            # (same convention as benchmarks/bench_step.py)
+            "steps_per_s": _steady_steps_per_s(report.history),
+            "steps_per_s_wall": (
                 round(report.steps_run / report.wall_time, 3)
                 if report.wall_time > 0 else 0.0
             ),
+            # bit-identity probe: replicas must end every run with the
+            # EXACT same parameters (compared across records by the rigs)
+            "param_digest": _params_digest(final_report.params),
+            "transport": None if reducer is None else {
+                "topology": getattr(reducer.wire, "topology", "star"),
+                "spec": dataclasses.asdict(reducer.spec),
+                **reducer.stats.snapshot(),
+            },
             "compile_count": session.compile_count,
             "drift_no_recompile": bool(no_recompile),
             "local_workers": list(
@@ -525,6 +657,9 @@ class ClusterCoordinator:
         self.membership_dir = (
             spec.membership_dir or os.path.join(self.run_dir, "members")
         )
+        self.compile_cache_dir = spec.compile_cache_dir or os.path.join(
+            tempfile.gettempdir(), "repro-xla-cache"
+        )
         self.coordinator_port = spec.coordinator_port or _free_port()
         self._server: Optional[SyncServer] = None
         self._procs: List[subprocess.Popen] = []
@@ -564,6 +699,8 @@ class ClusterCoordinator:
                 "--result", os.path.join(self.run_dir, f"result.p{pid}.json"),
                 "--resume-steps", str(resume_steps),
                 "--heartbeat-interval", str(self.spec.heartbeat_interval),
+                "--transport", json.dumps(self.spec.transport.to_dict()),
+                "--compile-cache-dir", self.compile_cache_dir,
             ]
             self._procs.append(subprocess.Popen(
                 cmd, env=env, stdout=out, stderr=subprocess.STDOUT,
@@ -703,6 +840,8 @@ def _worker_main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--result", default=None)
     ap.add_argument("--resume-steps", type=int, default=2)
     ap.add_argument("--heartbeat-interval", type=float, default=0.25)
+    ap.add_argument("--transport", default="{}")
+    ap.add_argument("--compile-cache-dir", default=None)
     args = ap.parse_args(argv)
 
     runtime = WorkerRuntime(
@@ -714,6 +853,8 @@ def _worker_main(argv: Optional[Sequence[str]] = None) -> int:
         factory=args.factory,
         factory_kwargs=json.loads(args.factory_kwargs),
         heartbeat_interval=args.heartbeat_interval,
+        transport=json.loads(args.transport),
+        compile_cache_dir=args.compile_cache_dir,
     )
     record = runtime.run(resume_steps=args.resume_steps)
     body = json.dumps(record, indent=1)

@@ -161,9 +161,13 @@ class ClusterContext:
         identical to the global step for dense models (the masked loss is a
         ratio of across-process sums).
 
-    ``sync`` is the coordinator transport (duck-typed:
+    ``sync`` is the coordinator control-plane client (duck-typed:
     ``allreduce(tag, tree) -> tree`` and ``barrier(tag)``); ``None`` for a
-    single-process compat fallback.
+    single-process compat fallback.  ``transport`` is the gradient wire
+    (:func:`repro.launch.transport.build_wire_transport` — star or ring)
+    configured by ``transport_spec``; the session's hostsync compile wraps
+    it in a :class:`~repro.launch.transport.GradReducer` cached here as
+    ``grad_reducer`` so error-feedback residuals survive recompiles.
     """
 
     process_id: int
@@ -171,6 +175,9 @@ class ClusterContext:
     mode: str = "hostsync"                 # "spmd" | "hostsync"
     sync: Any = None
     member: Optional[str] = None           # membership id (heartbeat name)
+    transport: Any = None                  # wire layer (star/ring), or None
+    transport_spec: Any = None             # TransportSpec, or None
+    grad_reducer: Any = None               # GradReducer cache (set at compile)
 
     def __post_init__(self):
         if self.mode not in ("spmd", "hostsync"):
@@ -178,10 +185,12 @@ class ClusterContext:
 
     @classmethod
     def detect(cls, process_id: int, n_processes: int, sync=None,
-               member: Optional[str] = None) -> "ClusterContext":
+               member: Optional[str] = None, transport=None,
+               transport_spec=None) -> "ClusterContext":
         mode = "spmd" if multiprocess_compute_supported() else "hostsync"
         return cls(process_id=process_id, n_processes=n_processes,
-                   mode=mode, sync=sync, member=member)
+                   mode=mode, sync=sync, member=member,
+                   transport=transport, transport_spec=transport_spec)
 
     @property
     def is_primary(self) -> bool:

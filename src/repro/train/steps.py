@@ -15,6 +15,7 @@ which resolves the logical-axis rule table against a live mesh into the
 from __future__ import annotations
 
 import dataclasses
+import math
 from functools import partial
 from typing import Any, Callable, Dict, Optional, Tuple
 
@@ -200,6 +201,109 @@ def make_apply_step(
             "tokens": sums["den"],
         }
         return params, opt_state, metrics
+
+    return apply_step
+
+
+def plan_buckets(params_abs: PyTree, n_buckets: int) -> Tuple[Tuple[int, ...], ...]:
+    """Split the param-leaf list into contiguous, byte-balanced groups.
+
+    Buckets are the cluster transport's unit of pipelining: the hostsync
+    grad step emits one flat f32 vector per group, so bucket *i*'s
+    reduction overlaps bucket *i+1*'s encode.  Greedy contiguous packing —
+    leaf order (and therefore the vector layout) is the deterministic
+    ``tree_leaves`` order every worker shares.
+    """
+    leaves = jax.tree_util.tree_leaves(params_abs)
+    n_leaves = len(leaves)
+    n_buckets = max(1, min(int(n_buckets), n_leaves))
+    sizes = [
+        int(jnp.dtype(l.dtype).itemsize)
+        * (int(math.prod(l.shape)) if l.shape else 1)
+        for l in leaves
+    ]
+    groups = []
+    start = 0
+    left_bytes = float(sum(sizes))
+    for b in range(n_buckets):
+        buckets_left = n_buckets - b
+        if buckets_left == 1:
+            groups.append(tuple(range(start, n_leaves)))
+            break
+        target = left_bytes / buckets_left
+        take, acc = 1, sizes[start]
+        while (
+            start + take < n_leaves
+            and (n_leaves - start - take) > (buckets_left - 1)
+            and abs(acc + sizes[start + take] - target) <= abs(acc - target)
+        ):
+            acc += sizes[start + take]
+            take += 1
+        groups.append(tuple(range(start, start + take)))
+        start += take
+        left_bytes -= acc
+    return tuple(groups)
+
+
+def make_bucketed_grad_step(
+    model: Model,
+    bucket_groups: Tuple[Tuple[int, ...], ...],
+    *,
+    aux_weight: float = 0.01,
+) -> Callable:
+    """:func:`make_partial_grad_step` with the grad pytree flattened into
+    one f32 vector per bucket group — the cluster transport's wire format.
+    Returns ``grad_step(params, batch) -> (bucket_vecs, sums)``.
+    """
+    base = make_partial_grad_step(model, aux_weight=aux_weight)
+
+    def grad_step(params, batch):
+        grads, sums = base(params, batch)
+        leaves = jax.tree_util.tree_leaves(grads)
+        vecs = tuple(
+            leaves[grp[0]].astype(jnp.float32).reshape(-1)
+            if len(grp) == 1 else
+            jnp.concatenate(
+                [leaves[i].astype(jnp.float32).reshape(-1) for i in grp]
+            )
+            for grp in bucket_groups
+        )
+        return vecs, sums
+
+    return grad_step
+
+
+def make_bucketed_apply_step(
+    optimizer: Optimizer,
+    lr_schedule: Callable[[jax.Array], jax.Array],
+    params_abs: PyTree,
+    bucket_groups: Tuple[Tuple[int, ...], ...],
+    *,
+    aux_weight: float = 0.01,
+) -> Callable:
+    """:func:`make_apply_step` taking the reduced bucket vectors instead of
+    a grad pytree; the unflatten happens inside the jitted step.  Exact
+    inverse of :func:`make_bucketed_grad_step`'s flatten (f32 round-trip of
+    f32/bf16 grads is lossless), so bucketing never changes numerics.
+    """
+    base = make_apply_step(optimizer, lr_schedule, aux_weight=aux_weight)
+    leaves_abs, treedef = jax.tree_util.tree_flatten(params_abs)
+    shapes = [l.shape for l in leaves_abs]
+    dtypes = [l.dtype for l in leaves_abs]
+    counts = [int(math.prod(s)) if s else 1 for s in shapes]
+
+    def apply_step(params, opt_state: OptState, bucket_vecs, sums):
+        leaves = [None] * len(leaves_abs)
+        for grp, vec in zip(bucket_groups, bucket_vecs):
+            off = 0
+            for i in grp:
+                n = counts[i]
+                leaves[i] = (
+                    vec[off:off + n].reshape(shapes[i]).astype(dtypes[i])
+                )
+                off += n
+        grads = jax.tree_util.tree_unflatten(treedef, leaves)
+        return base(params, opt_state, grads, sums)
 
     return apply_step
 

@@ -1,0 +1,475 @@
+"""Cluster gradient transport: codec, buckets, sync rounds, ring wire.
+
+Everything here runs IN-PROCESS (threads stand in for worker processes) so
+the suite stays fast; the real multi-process path is covered by
+``benchmarks/cluster_smoke.py`` and the elastic test in
+``tests/test_cluster.py``.  The property under test throughout is the
+transport's determinism invariant: the reduced value is the f32 sum, in
+process-id order, of the decoded per-worker payloads — so replicas that
+start identical stay BIT-identical, with or without compression.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.topology import ClusterSpec, TransportSpec
+from repro.launch.cluster import SyncClient, SyncServer
+from repro.launch.transport import (
+    GradCodec, GradReducer, RingTransport, StarTransport, SyncPeerLost,
+    build_wire_transport,
+)
+
+
+# ---------------------------------------------------------------------------
+# TransportSpec
+# ---------------------------------------------------------------------------
+
+
+def test_transport_spec_validates():
+    assert TransportSpec().compression == "none"
+    with pytest.raises(ValueError, match="compression"):
+        TransportSpec(compression="zstd")
+    with pytest.raises(ValueError, match="topology"):
+        TransportSpec(topology="mesh")
+    with pytest.raises(ValueError, match="topk_ratio"):
+        TransportSpec(compression="topk", topk_ratio=0.0)
+    with pytest.raises(ValueError, match="buckets"):
+        TransportSpec(buckets=0)
+
+
+def test_transport_spec_production_preset_and_dict_coercion():
+    p = TransportSpec.production()
+    assert (p.compression, p.topology, p.overlap) == ("int8", "ring", True)
+    assert p.buckets > 1
+    q = TransportSpec.production(topology="star", timeout=7.0)
+    assert q.topology == "star" and q.timeout == 7.0
+    # ClusterSpec accepts the kwargs-dict form (the CLI/JSON path)
+    cs = ClusterSpec(processes=2, transport={"compression": "int8"})
+    assert isinstance(cs.transport, TransportSpec)
+    assert cs.transport.compression == "int8"
+
+
+# ---------------------------------------------------------------------------
+# Codec
+# ---------------------------------------------------------------------------
+
+
+def test_codec_raw_roundtrip():
+    codec = GradCodec(TransportSpec())
+    vec = np.arange(10, dtype=np.float32)
+    payload = codec.encode(0, vec)
+    np.testing.assert_array_equal(codec.decode(payload), vec)
+    assert GradCodec.nbytes(payload) == vec.nbytes
+
+
+def test_codec_int8_bounded_error_and_compression():
+    rng = np.random.default_rng(0)
+    vec = rng.standard_normal(4096).astype(np.float32)
+    codec = GradCodec(TransportSpec(compression="int8", chunk=512))
+    payload = codec.encode(0, vec)
+    dec = codec.decode(payload)
+    # per-chunk scale = absmax/127 -> error bounded by half a quantum
+    scale = np.repeat(payload["s"], 512)[: vec.size]
+    assert np.all(np.abs(dec - vec) <= scale * 0.5 + 1e-7)
+    assert GradCodec.nbytes(payload) < vec.nbytes / 3.5
+
+
+def test_codec_topk_keeps_largest_and_is_deterministic():
+    vec = np.array([0.1, -5.0, 0.2, 3.0, -0.3, 0.05, 2.0, -1.0],
+                   dtype=np.float32)
+    codec = GradCodec(TransportSpec(compression="topk", topk_ratio=0.25))
+    payload = codec.encode(0, vec)
+    assert payload["k"] == "topk"
+    assert list(payload["i"]) == [1, 3]          # |-5| and |3|, index-sorted
+    dec = codec.decode(payload)
+    np.testing.assert_array_equal(dec[[1, 3]], vec[[1, 3]])
+    assert dec[[0, 2, 4, 5, 6, 7]].sum() == 0.0
+    # same input re-encoded by a fresh codec -> byte-identical payload
+    p2 = GradCodec(
+        TransportSpec(compression="topk", topk_ratio=0.25)
+    ).encode(0, vec)
+    assert p2["i"].tobytes() == payload["i"].tobytes()
+    assert p2["v"].tobytes() == payload["v"].tobytes()
+
+
+def test_codec_error_feedback_reinjects_quantization_error():
+    """Sending the SAME vector repeatedly, the running mean of the decoded
+    payloads converges on the true vector: the residual re-enters each
+    step instead of accumulating as bias."""
+    rng = np.random.default_rng(1)
+    vec = rng.standard_normal(2048).astype(np.float32) * 1e-3
+    codec = GradCodec(TransportSpec(compression="topk", topk_ratio=0.05))
+    total = np.zeros_like(vec)
+    n = 40
+    for _ in range(n):
+        total += codec.decode(codec.encode(0, vec))
+    err0 = np.linalg.norm(codec.decode(codec.encode(1, vec)) - vec)
+    err_mean = np.linalg.norm(total / n - vec)
+    assert err_mean < err0 / 4          # the mean is far closer than 1 shot
+
+
+def test_codec_residual_resets_on_shape_change():
+    codec = GradCodec(TransportSpec(compression="int8"))
+    codec.encode(0, np.ones(100, dtype=np.float32))
+    assert codec._residual[0].shape == (100,)
+    codec.encode(0, np.ones(50, dtype=np.float32))   # elastic replan
+    assert codec._residual[0].shape == (50,)
+
+
+# ---------------------------------------------------------------------------
+# Bucket planning
+# ---------------------------------------------------------------------------
+
+
+def test_plan_buckets_contiguous_and_balanced():
+    from repro.train.steps import plan_buckets
+
+    leaves = {
+        "a": np.zeros((100,), np.float32),
+        "b": np.zeros((100,), np.float32),
+        "c": np.zeros((100,), np.float32),
+        "d": np.zeros((100,), np.float32),
+    }
+    groups = plan_buckets(leaves, 2)
+    assert groups == ((0, 1), (2, 3))
+    # every leaf exactly once, in order
+    flat = [i for g in groups for i in g]
+    assert flat == list(range(4))
+    # more buckets than leaves clamps; zero clamps to 1
+    assert len(plan_buckets(leaves, 99)) == 4
+    assert plan_buckets(leaves, 0) == (tuple(range(4)),)
+
+
+def test_plan_buckets_byte_weighted():
+    from repro.train.steps import plan_buckets
+
+    leaves = [
+        np.zeros((1000,), np.float32),   # one huge leaf ...
+        np.zeros((10,), np.float32),
+        np.zeros((10,), np.float32),
+        np.zeros((10,), np.float32),
+    ]
+    groups = plan_buckets(leaves, 2)
+    assert groups == ((0,), (1, 2, 3))   # ... gets a bucket of its own
+
+
+# ---------------------------------------------------------------------------
+# SyncServer rounds (the satellite fixes)
+# ---------------------------------------------------------------------------
+
+
+def _spawn_clients(server, n, timeout=10.0):
+    return [
+        SyncClient(server.address, pid, timeout=timeout) for pid in range(n)
+    ]
+
+
+def test_sync_allgather_is_pid_ordered():
+    server = SyncServer(3)
+    try:
+        clients = _spawn_clients(server, 3)
+        out = [None] * 3
+
+        def go(pid):
+            out[pid] = clients[pid].allgather("g", f"blob-{pid}")
+
+        ts = [threading.Thread(target=go, args=(p,)) for p in range(3)]
+        [t.start() for t in ts]
+        [t.join(10) for t in ts]
+        assert out[0] == out[1] == out[2] == ["blob-0", "blob-1", "blob-2"]
+    finally:
+        server.close()
+
+
+def test_sync_tag_reuse_across_steps():
+    """Rounds retire once every participant has read the result, so the
+    same tag is reusable next step (the reducer reuses ``step/N/bK``
+    layouts and long runs must not leak round state)."""
+    server = SyncServer(2)
+    try:
+        clients = _spawn_clients(server, 2)
+        for step in range(3):
+            out = [None, None]
+
+            def go(pid):
+                out[pid] = clients[pid].allreduce("grad", {"v": pid + step})
+
+            ts = [threading.Thread(target=go, args=(p,)) for p in (0, 1)]
+            [t.start() for t in ts]
+            [t.join(10) for t in ts]
+            assert out[0] == out[1] == {"v": 2 * step + 1}
+        assert not server._rounds        # nothing left behind
+    finally:
+        server.close()
+
+
+def test_sync_round_poisoned_after_peer_death():
+    """A participant dying mid-round must NOT hang the survivors: once the
+    coordinator marks it dead, the blocked join raises ``SyncPeerLost``."""
+    server = SyncServer(2)
+    try:
+        (client,) = _spawn_clients(server, 2)[:1]
+        err = []
+
+        def go():
+            try:
+                client.allreduce("g", {"v": 1.0})
+            except SyncPeerLost as e:
+                err.append(e)
+
+        t = threading.Thread(target=go)
+        t.start()
+        time.sleep(0.2)                  # let the join block on peer 1
+        server.mark_dead(1)
+        t.join(10)
+        assert err and "lost" in str(err[0])
+    finally:
+        server.close()
+
+
+def test_sync_concurrent_large_payloads():
+    """Back-to-back rounds with MB-scale arrays: the tree-sum runs outside
+    the server lock, so concurrent joins on other tags make progress and
+    every client sees the correct pid-ordered result."""
+    server = SyncServer(4)
+    try:
+        clients = _spawn_clients(server, 4)
+        big = np.full(1 << 18, 1.0, dtype=np.float32)   # 1 MiB each
+        out = [None] * 4
+
+        def go(pid):
+            acc = []
+            for r in range(2):
+                acc.append(
+                    clients[pid].allreduce(f"big/{r}", big * (pid + 1))
+                )
+            out[pid] = acc
+
+        ts = [threading.Thread(target=go, args=(p,)) for p in range(4)]
+        [t.start() for t in ts]
+        [t.join(30) for t in ts]
+        for pid in range(4):
+            for r in range(2):
+                np.testing.assert_array_equal(out[pid][r], big * 10.0)
+    finally:
+        server.close()
+
+
+def test_sync_kv_retires_on_read():
+    server = SyncServer(1)
+    try:
+        (client,) = _spawn_clients(server, 1)
+        assert client.get("addr") is None
+        client.put("addr", [1, 2])
+        assert client.get("addr") == [1, 2]
+        assert client.get("addr") is None          # consumed exactly once
+    finally:
+        server.close()
+
+
+def test_sync_client_timeout_on_silent_coordinator():
+    """A coordinator that accepts the handshake then goes mute must raise
+    ``SyncPeerLost`` after the configured timeout, not block forever."""
+    from multiprocessing import connection
+
+    listener = connection.Listener(
+        ("127.0.0.1", 0), authkey=b"repro-cluster-sync"
+    )
+    stop = threading.Event()
+
+    def mute_server():
+        conn = listener.accept()
+        conn.recv()                          # hello
+        conn.send({"ok": True, "n": 2})
+        stop.wait(10)                        # then say nothing, ever
+        conn.close()
+
+    t = threading.Thread(target=mute_server, daemon=True)
+    t.start()
+    host, port = listener.address
+    client = SyncClient(f"{host}:{port}", 0, timeout=0.3)
+    with pytest.raises(SyncPeerLost, match="silent"):
+        client.barrier("never")
+    stop.set()
+    listener.close()
+
+
+# ---------------------------------------------------------------------------
+# Ring wire (threads as workers)
+# ---------------------------------------------------------------------------
+
+
+def _ring_workers(n, fn, timeout=15.0):
+    """Run ``fn(pid, ring)`` on n threads, each owning a RingTransport."""
+    server = SyncServer(n)
+    results, errs = [None] * n, []
+
+    def worker(pid):
+        sync = SyncClient(server.address, pid, timeout=timeout)
+        ring = None
+        try:
+            ring = RingTransport(sync, pid, n, timeout=timeout)
+            results[pid] = fn(pid, ring)
+        except BaseException as e:       # pragma: no cover - diagnostics
+            errs.append((pid, e))
+        finally:
+            if ring is not None:
+                ring.close()
+            sync.close()
+
+    ts = [threading.Thread(target=worker, args=(p,)) for p in range(n)]
+    [t.start() for t in ts]
+    [t.join(60) for t in ts]
+    server.close()
+    assert not errs, errs
+    return results
+
+
+def test_ring_allgather_three_workers():
+    def fn(pid, ring):
+        out = []
+        for r in range(3):                    # several rounds, same ring
+            out.append(ring.allgather(f"r{r}", {"pid": pid, "r": r}))
+        return out
+
+    results = _ring_workers(3, fn)
+    for rnd in range(3):
+        expect = [{"pid": p, "r": rnd} for p in range(3)]
+        assert all(res[rnd] == expect for res in results)
+
+
+def test_ring_large_blobs_do_not_deadlock():
+    """Blobs far beyond the socket buffer: the background sender thread is
+    what keeps n simultaneous forwards from deadlocking the ring."""
+    big = np.arange(1 << 19, dtype=np.float32)          # 2 MiB
+
+    def fn(pid, ring):
+        got = ring.allgather("big", big * pid)
+        return [float(g.sum()) for g in got]
+
+    results = _ring_workers(3, fn, timeout=30.0)
+    expect = [float((big * p).sum()) for p in range(3)]
+    assert results[0] == results[1] == results[2] == expect
+
+
+def test_build_wire_transport_selects_topology():
+    assert build_wire_transport(TransportSpec(), None, 0, 4) is None
+    assert build_wire_transport(TransportSpec(), object(), 0, 1) is None
+    star = build_wire_transport(TransportSpec(), object(), 0, 2)
+    assert isinstance(star, StarTransport)
+
+
+# ---------------------------------------------------------------------------
+# GradReducer end-to-end (virtual replicas)
+# ---------------------------------------------------------------------------
+
+
+def _reduce_workers(n, spec, fn, timeout=20.0):
+    """n worker threads, each with its own SyncClient + wire + reducer."""
+    server = SyncServer(n)
+    results, errs = [None] * n, []
+
+    def worker(pid):
+        sync = SyncClient(server.address, pid, timeout=timeout)
+        red = None
+        try:
+            wire = build_wire_transport(spec, sync, pid, n)
+            red = GradReducer(wire, spec, pid, n)
+            results[pid] = fn(pid, red)
+        except BaseException as e:       # pragma: no cover - diagnostics
+            errs.append((pid, e))
+        finally:
+            if red is not None:
+                red.close()
+            sync.close()
+
+    ts = [threading.Thread(target=worker, args=(p,)) for p in range(n)]
+    [t.start() for t in ts]
+    [t.join(90) for t in ts]
+    server.close()
+    assert not errs, errs
+    return results
+
+
+@pytest.mark.parametrize("spec", [
+    TransportSpec(),                                           # star tree-sum
+    TransportSpec(compression="int8", buckets=2, overlap=True),
+    TransportSpec(compression="int8", topology="ring", buckets=2,
+                  overlap=True),
+    TransportSpec(compression="topk", topk_ratio=0.1, topology="ring"),
+], ids=["star-none", "star-int8-overlap", "ring-int8-overlap", "ring-topk"])
+def test_reducer_replicas_bit_identical(spec):
+    """Every topology x compression combo: all replicas receive byte-equal
+    reduced vectors and tree-summed extras, across steps."""
+    rng = np.random.default_rng(7)
+    grads = {
+        pid: [rng.standard_normal(700).astype(np.float32) for _ in range(4)]
+        for pid in range(3)
+    }
+
+    def fn(pid, red):
+        out = []
+        for step in range(4):
+            vecs, sums = red.reduce(
+                f"step/{step}",
+                [grads[pid][step][:512], grads[pid][step][512:]],
+                {"loss": float(pid + step)},
+            )
+            out.append((
+                b"".join(np.asarray(v).tobytes() for v in vecs),
+                sums["loss"],
+            ))
+        return out
+
+    results = _reduce_workers(3, spec, fn)
+    assert results[0] == results[1] == results[2]
+    # the extras really are the cross-replica sum
+    assert results[0][0][1] == pytest.approx(0 + 1 + 2)
+
+
+def test_reducer_error_feedback_convergence():
+    """Compressed training tracks uncompressed: 2 virtual replicas descend
+    a quadratic with int8-reduced gradients; replicas stay bit-identical
+    every step and the final loss lands within tolerance of the exact
+    run's."""
+    target = np.linspace(-2.0, 2.0, 600).astype(np.float32)
+
+    def descend(spec):
+        steps = 60
+
+        def fn(pid, red):
+            x = np.zeros_like(target)      # identical start on all replicas
+            history = []
+            rng = np.random.default_rng(100 + pid)
+            for step in range(steps):
+                noise = rng.standard_normal(x.size).astype(np.float32) * 0.05
+                grad = (x - target) / 2 + noise   # per-replica half-grad
+                (g,), _ = red.reduce(f"s/{step}", [grad], None)
+                x = x - 0.1 * np.asarray(g)
+                history.append(x.tobytes())
+            return float(np.mean((x - target) ** 2)), history
+
+        res = _reduce_workers(2, spec, fn)
+        assert res[0][1] == res[1][1]      # bit-identical EVERY step
+        return res[0][0]
+
+    exact = descend(TransportSpec())
+    int8 = descend(TransportSpec(compression="int8", buckets=1))
+    assert exact < 0.02                    # the exact run converges
+    assert abs(int8 - exact) < 0.01       # compressed tracks it
+
+
+def test_reducer_reports_wire_stats():
+    spec = TransportSpec(compression="int8")
+
+    def fn(pid, red):
+        for step in range(3):
+            red.reduce(f"s/{step}", [np.ones(2048, np.float32)], None)
+        return red.stats.snapshot()
+
+    stats = _reduce_workers(2, spec, fn)[0]
+    assert stats["steps"] == 3
+    assert stats["compression_ratio"] > 3.0
+    assert stats["wire_bytes_per_step"] < stats["raw_bytes_per_step"]
