@@ -18,7 +18,11 @@ Beyond the two backend records it benches per-arch hot paths: the MoE model
 with the fused Pallas dispatch kernel vs the dense gather/scatter path (the
 A/B for the fusion work), the rwkv6 linear-recurrence arch, and the flash
 backend at both spool codecs (``spool_bytes`` records the at-rest payload —
-the narrow codec writes ~4x less).
+the narrow codec writes ~4x less).  The ``dense-int8`` / ``moe-int8``
+records run the same problems with ``train_precision="int8-fused"`` (the
+in-kernel low-precision path); their ``residual_bytes`` /
+``residual_bytes_f32`` fields price the saved-for-backward memory both ways
+(eval_shape only) — the A/B for the quantized-kernel work.
 
 Cluster records measure the multi-process transport: the legacy
 star/uncompressed baseline (``cluster``), the production int8 ring with
@@ -67,8 +71,10 @@ WARMUP = 2
 
 
 def _session(backend: str, steps: int, arch: str = ARCH,
-             codec: str = None) -> Session:
+             codec: str = None, precision: str = None) -> Session:
     cfg = smoke_config(arch)
+    if precision is not None:
+        cfg = cfg.with_(train_precision=precision)
     storage_kw = {"codec": codec} if codec else {}
     spec = FleetSpec.demo(n_csds=3).with_storage(backend, **storage_kw)
     return Session(
@@ -83,9 +89,10 @@ def _session(backend: str, steps: int, arch: str = ARCH,
 
 def bench_one(backend: str, steps: int, *, arch: str = ARCH,
               name: str = None, moe_impl: str = None,
-              codec: str = None) -> Dict:
+              codec: str = None, precision: str = None) -> Dict:
     """One throughput record.  ``moe_impl`` forces the MoE dispatch path
-    (the fused-vs-dense A/B); ``codec`` selects the flash spool width."""
+    (the fused-vs-dense A/B); ``codec`` selects the flash spool width;
+    ``precision`` sets ``train_precision`` (the int8-fused A/B)."""
     from repro.models import moe as moe_mod
 
     saved_impl = moe_mod.MOE_IMPL
@@ -93,14 +100,16 @@ def bench_one(backend: str, steps: int, *, arch: str = ARCH,
         moe_mod.MOE_IMPL = moe_impl
     try:
         return _bench_one_inner(backend, steps, arch=arch, name=name,
-                                moe_impl=moe_impl, codec=codec)
+                                moe_impl=moe_impl, codec=codec,
+                                precision=precision)
     finally:
         moe_mod.MOE_IMPL = saved_impl
 
 
 def _bench_one_inner(backend: str, steps: int, *, arch: str,
-                     name: str, moe_impl: str, codec: str) -> Dict:
-    s = _session(backend, steps, arch=arch, codec=codec)
+                     name: str, moe_impl: str, codec: str,
+                     precision: str = None) -> Dict:
+    s = _session(backend, steps, arch=arch, codec=codec, precision=precision)
     compiled = s.compile()
     plan = s.shard()
 
@@ -167,6 +176,18 @@ def _bench_one_inner(backend: str, steps: int, *, arch: str,
     }
     if moe_impl is not None:
         rec["moe_impl"] = moe_impl
+    if precision is not None:
+        # price the saved-for-backward residuals at this precision vs f32
+        # (remat/scan off: the raw footprint is what int8-fused shrinks —
+        # eval_shape only, nothing is allocated)
+        from repro.train.steps import abstract_batch, residual_bytes
+
+        base = smoke_config(arch).with_(remat=False, scan_layers=False)
+        batch_abs = abstract_batch(plan.global_rows, SEQ_LEN)
+        rec["train_precision"] = precision
+        rec["residual_bytes"] = residual_bytes(
+            get_model(base.with_(train_precision=precision)), batch_abs)
+        rec["residual_bytes_f32"] = residual_bytes(get_model(base), batch_abs)
     if backend == "flash":
         # bytes each device wrote to its own flash (the paper's at-rest cost)
         devices = list(s.devices)
@@ -281,6 +302,12 @@ def run(steps: int = 8, out: str = "BENCH_step.json", verbose: bool = True,
                   moe_impl="fused", name="moe-fused"),
         bench_one("synthetic", steps, arch="qwen3-moe-30b-a3b",
                   moe_impl="dense", name="moe-dense"),
+        # int8-fused in-kernel training A/B vs the f32 records above; the
+        # residual_bytes fields carry the memory side of the trade
+        bench_one("synthetic", steps, precision="int8-fused",
+                  name="dense-int8"),
+        bench_one("synthetic", steps, arch="qwen3-moe-30b-a3b",
+                  moe_impl="fused", precision="int8-fused", name="moe-int8"),
         bench_one("synthetic", steps, arch="rwkv6-7b", name="rwkv6"),
         # flash spool width A/B: same samples, 4x fewer bytes at rest
         bench_one("flash", steps, codec="i32", name="flash-i32"),
@@ -322,6 +349,11 @@ def run(steps: int = 8, out: str = "BENCH_step.json", verbose: bool = True,
             extra = ""
             if "spool_bytes" in r:
                 extra = f"  spool={r['spool_bytes']:,}B ({r['codec']})"
+            if "residual_bytes" in r:
+                extra = (
+                    f"  resid={r['residual_bytes']:,}B "
+                    f"(f32 {r['residual_bytes_f32']:,}B)"
+                )
             print(
                 f"[{r['name']:>10s}] {r['steps_per_s']:6.2f} steps/s  "
                 f"compiles={r['compile_count']}  "

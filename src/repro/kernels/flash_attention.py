@@ -32,8 +32,8 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _attn_kernel(
-    q_ref, k_ref, v_ref, o_ref,          # blocks
+def _attn_body(
+    q_ref, kv_load, o_ref,               # q block, kv loader, out block
     m_ref, l_ref, acc_ref,               # VMEM scratch carried over kv steps
     *,
     scale: float,
@@ -45,6 +45,11 @@ def _attn_kernel(
     seq_q: int,
     seq_kv: int,
 ):
+    """Shared online-softmax sweep; ``kv_load() -> (k, v)`` f32 (bk, D) tiles.
+
+    The int8 variant dequantizes inside ``kv_load`` — the running stats,
+    masking, and MXU matmuls are identical, so both precisions share one
+    sweep implementation."""
     iq = pl.program_id(2)
     ik = pl.program_id(3)
 
@@ -59,8 +64,7 @@ def _attn_kernel(
 
     def _compute():
         q = q_ref[0, 0].astype(jnp.float32) * scale    # (bq, D)
-        k = k_ref[0, 0].astype(jnp.float32)            # (bk, D)
-        v = v_ref[0, 0].astype(jnp.float32)            # (bk, D)
+        k, v = kv_load()                               # (bk, D) each, f32
         s = jax.lax.dot_general(                       # (bq, bk) on the MXU
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         )
@@ -100,6 +104,30 @@ def _attn_kernel(
     def _finalize():
         l = jnp.maximum(l_ref[...], 1e-30)
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, **kw):
+    _attn_body(
+        q_ref,
+        lambda: (k_ref[0, 0].astype(jnp.float32), v_ref[0, 0].astype(jnp.float32)),
+        o_ref, m_ref, l_ref, acc_ref, **kw,
+    )
+
+
+def _attn_int8_kernel(
+    q_ref, k_ref, ks_ref, v_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref, **kw
+):
+    # int8 K/V tiles ride with (bk, 1) f32 per-row scales on the same index
+    # map; dequantize as the tile enters the sweep — K/V never exist in f32
+    # outside this VMEM-resident block.
+    _attn_body(
+        q_ref,
+        lambda: (
+            k_ref[0, 0].astype(jnp.float32) * ks_ref[0, 0],
+            v_ref[0, 0].astype(jnp.float32) * vs_ref[0, 0],
+        ),
+        o_ref, m_ref, l_ref, acc_ref, **kw,
+    )
 
 
 def flash_attention_fwd(
@@ -164,6 +192,92 @@ def flash_attention_fwd(
         ],
         interpret=interpret,
     )(qt, kt, vt)
+    if pad_q:
+        out = out[:, :, :Sq]
+    return jnp.moveaxis(out, 1, 2)
+
+
+def flash_attention_int8_fwd(
+    q: jax.Array,                # (B, Sq, H, D) float
+    k: jax.Array,                # (B, Skv, Hkv, D) int8
+    k_scale: jax.Array,          # (B, Skv, Hkv, 1) f32 per-row scales
+    v: jax.Array,                # (B, Skv, Hkv, D) int8
+    v_scale: jax.Array,          # (B, Skv, Hkv, 1) f32
+    *,
+    causal: bool = False,
+    window: Optional[int] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Flash attention over int8 K/V with in-sweep dequantization.
+
+    Same grid/blocking as :func:`flash_attention_fwd`; the scale operands
+    ride (1, 1, bk, 1) BlockSpecs on the K/V index map (GQA head-group
+    divide included), so a K/V tile and its row scales always arrive
+    together and the f32 K/V tile exists only inside VMEM.
+    """
+    B, Sq, H, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    assert H % Hkv == 0, (H, Hkv)
+    assert k.dtype == jnp.int8 and v.dtype == jnp.int8, (k.dtype, v.dtype)
+    group = H // Hkv
+    bq = min(block_q, max(Sq, 8))
+    bk = min(block_k, max(Skv, 8))
+
+    qt = jnp.moveaxis(q, 2, 1)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    kst = jnp.moveaxis(k_scale, 2, 1)
+    vst = jnp.moveaxis(v_scale, 2, 1)
+
+    pad_q = (-Sq) % bq
+    pad_k = (-Skv) % bk
+    if pad_q:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kv_pad = ((0, 0), (0, 0), (0, pad_k), (0, 0))
+        kt = jnp.pad(kt, kv_pad)
+        vt = jnp.pad(vt, kv_pad)
+        kst = jnp.pad(kst, kv_pad)   # zero scales: pad rows dequantize to 0
+        vst = jnp.pad(vst, kv_pad)
+    n_q = qt.shape[2] // bq
+    n_kv = kt.shape[2] // bk
+
+    grid = (B, H, n_q, n_kv)
+    kernel = functools.partial(
+        _attn_int8_kernel,
+        scale=1.0 / math.sqrt(D),
+        causal=causal,
+        window=window,
+        bq=bq,
+        bk=bk,
+        n_kv=n_kv,
+        seq_q=Sq,
+        seq_kv=Skv,
+    )
+    kv_spec = pl.BlockSpec(
+        (1, 1, bk, D), lambda b, h, iq, ik, g=group: (b, h // g, ik, 0)
+    )
+    sc_spec = pl.BlockSpec(
+        (1, 1, bk, 1), lambda b, h, iq, ik, g=group: (b, h // g, ik, 0)
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            kv_spec, sc_spec, kv_spec, sc_spec,
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(qt.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),     # m
+            pltpu.VMEM((bq, 1), jnp.float32),     # l
+            pltpu.VMEM((bq, D), jnp.float32),     # acc
+        ],
+        interpret=interpret,
+    )(qt, kt, kst, vt, vst)
     if pad_q:
         out = out[:, :, :Sq]
     return jnp.moveaxis(out, 1, 2)

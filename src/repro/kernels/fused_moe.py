@@ -20,12 +20,20 @@ This kernel keeps all of them in VMEM:
     so each expert's weights are fetched once per ``C/bc`` blocks (Pallas
     revolving-buffer reuse) and the SwiGLU runs entirely in VMEM.
 
+  * **combine as the transposed one-hot matmul** — the scatter-add of gated
+    slot rows back to token rows is the dispatch selection matrix applied
+    the other way: ``out[t] = Σ_s 1[slot_tok[s] = t] · y[s]``.  A second
+    kernel (:func:`fused_moe_combine`) builds the same one-hot from the same
+    ``(E·C, 1)`` slot table per token block and contracts it against the
+    gated slot buffer on the MXU, so expert outputs never round-trip through
+    an XLA scatter.  Each token row receives at most ``k`` nonzero addends
+    (adding the 0 rows is exact in f32), which keeps the combine bit-exact
+    vs the scatter-add (property-tested, including capacity-overflow drops).
+
 What stays outside (in ordinary XLA, by necessity): the router matmul +
 top-k + the stable sort that assigns capacity slots (Pallas TPU has no sort
-primitive — vLLM's fused_moe splits the same way), and the final
-scatter-add of gated slot rows back to token rows, which is irreducible
-output traffic.  Both are O(T·k) index ops / O(T·d) copies, not the
-O(T·d·f) hot loop.
+primitive — vLLM's fused_moe splits the same way).  Those are O(T·k) index
+ops, not the O(T·d·f) hot loop.
 
 Scaling note: this variant holds the full ``(T, d)`` activation block in
 VMEM (fine for the per-device token counts this repo runs; a production
@@ -168,6 +176,70 @@ def fused_moe_gemm(
     )(slot_tok, slot_gate, x, wg, wu, wo)
 
 
+def _combine_kernel(
+    tok_ref,                    # (S, 1) int32 slot->token table
+    y_ref,                      # (S, d) gated expert outputs
+    o_ref,                      # (bt, d) token-row output block
+    *,
+    bt: int,
+    S: int,
+):
+    it = pl.program_id(0)
+    tok = tok_ref[...]                                          # (S, 1)
+    # transposed one-hot: column t of `sel` marks the slots owned by token
+    # t0+t; empty slots carry the sentinel token index (>= T) and their y
+    # rows are gate-zeroed anyway, so they contribute exact +0.0
+    t_iota = it * bt + jax.lax.broadcasted_iota(jnp.int32, (S, bt), 1)
+    sel = (tok == t_iota).astype(jnp.float32)                   # (S, bt)
+    y = y_ref[...].astype(jnp.float32)
+    o_ref[...] = jax.lax.dot_general(                           # (bt, d) MXU
+        sel, y, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def fused_moe_combine(
+    y: jax.Array,               # (E*C, d) gated slot rows
+    slot_tok: jax.Array,        # (E*C, 1) int32 (sentinel T for empty slots)
+    T: int,
+    *,
+    block_t: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Combine gated slot rows into (T, d) token rows as a one-hot matmul.
+
+    Bit-exact vs the XLA ``.at[st].add`` scatter: every token sums the same
+    <= k gated slot rows, and summing them with interleaved exact zeros is
+    the same f32 value as the sequential scatter-add.
+    """
+    S, d = y.shape
+    assert slot_tok.shape == (S, 1), slot_tok.shape
+    bt = min(block_t, max(T, 8))
+    pad_t = (-T) % bt
+    Tp = T + pad_t
+    # padded token rows only ever match the sentinel's gate-zeroed slots (or
+    # nothing at all), and are sliced back off below
+    out = pl.pallas_call(
+        functools.partial(_combine_kernel, bt=bt, S=S),
+        grid=(Tp // bt,),
+        in_specs=[
+            pl.BlockSpec((S, 1), lambda it: (0, 0)),
+            pl.BlockSpec((S, d), lambda it: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, d), lambda it: (it, 0)),
+        out_shape=jax.ShapeDtypeStruct((Tp, d), y.dtype),
+        interpret=interpret,
+    )(slot_tok, y)
+    return out[:T]
+
+
+def _combine_xla(y, st, slot, keep, T, E, C):
+    """The scatter-add combine the kernel replaced — kept as the bit-exact
+    A/B target (`combine="xla"`) and the off-Pallas fallback."""
+    safe_slot = jnp.minimum(slot, E * C - 1)
+    out_copies = y[safe_slot] * keep[:, None].astype(y.dtype)
+    return jnp.zeros((T, y.shape[1]), y.dtype).at[st].add(out_copies)
+
+
 def fused_moe_mlp_fwd(
     x: jax.Array,               # (T, d)
     router: jax.Array,          # (d, E)
@@ -177,11 +249,13 @@ def fused_moe_mlp_fwd(
     capacity: int,
     block_c: int = 128,
     interpret: bool = False,
+    combine: str = "kernel",    # "kernel" | "xla" (the A/B + fallback)
 ) -> Tuple[jax.Array, jax.Array]:
-    """Full fused MoE forward: routing → fused kernel → combine.
+    """Full fused MoE forward: routing → fused kernel → in-kernel combine.
 
     Returns ``(out (T, d), aux)``; matches
-    :func:`repro.kernels.ref.fused_moe_mlp_ref` (parity-tested).
+    :func:`repro.kernels.ref.fused_moe_mlp_ref` (parity-tested), and the
+    two combine paths match each other bit-exactly (property-tested).
     """
     T, _ = x.shape
     E = router.shape[1]
@@ -189,9 +263,11 @@ def fused_moe_mlp_fwd(
     slot_tok, slot_gate, st, slot, keep, aux = moe_routing(x, router, k, C)
     y = fused_moe_gemm(x, wg, wu, wo, slot_tok, slot_gate,
                        block_c=block_c, interpret=interpret)
-    # combine: gather each token copy's gated slot row, sum the k copies.
-    # (gates were applied in-kernel; dropped copies are masked by `keep`.)
-    safe_slot = jnp.minimum(slot, E * C - 1)
-    out_copies = y[safe_slot] * keep[:, None].astype(y.dtype)
-    out = jnp.zeros((T, y.shape[1]), y.dtype).at[st].add(out_copies)
+    if combine == "kernel":
+        # gates were applied in-kernel; dropped copies never got a slot and
+        # empty slots are gate-zeroed, so the one-hot contraction is the
+        # whole combine
+        out = fused_moe_combine(y, slot_tok, T, interpret=interpret)
+    else:
+        out = _combine_xla(y, st, slot, keep, T, E, C)
     return out, aux

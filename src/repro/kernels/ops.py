@@ -27,11 +27,16 @@ from repro.kernels.decode_attention import (
     paged_decode_attention_int8 as _paged_decode_int8_pallas,
 )
 from repro.kernels.flash_attention import flash_attention_fwd as _flash_pallas
+from repro.kernels.flash_attention import (
+    flash_attention_int8_fwd as _flash_int8_pallas,
+)
 from repro.kernels.fused_moe import fused_moe_mlp_fwd as _fused_moe_pallas
 from repro.kernels.quantize import dequantize_int8 as _deq
 from repro.kernels.quantize import quantize_int8 as _quant_pallas
 from repro.kernels.rglru_scan import rglru_scan as _rglru_pallas
+from repro.kernels.rglru_scan import rglru_scan_int8 as _rglru_int8_pallas
 from repro.kernels.rwkv6_scan import rwkv6_scan as _rwkv6_pallas
+from repro.kernels.rwkv6_scan import rwkv6_scan_int8 as _rwkv6_int8_pallas
 
 
 # ---------------------------------------------------------------------------
@@ -79,6 +84,95 @@ def flash_attention(
     if not use_kernel:
         return R.flash_attention_ref(q, k, v, causal=causal, window=window)
     return _flash_attention(q, k, v, causal, window, block, interpret)
+
+
+# ---------------------------------------------------------------------------
+# quantized-training (q8) ops: int8 streamed activations, int8 residuals
+# ---------------------------------------------------------------------------
+#
+# Each q8 op quantizes its big streamed operands per-row to int8 (deterministic
+# round-half-up — the Pallas quantize kernel with constant 0.5 noise, pinned
+# bit-equal to the oracle), runs the fused kernel that dequantizes tiles
+# inside VMEM, and saves the INT8 tensors + scales as the custom-vjp
+# residuals — the saved-for-backward pytree shrinks ~4x.  Backward
+# dequantizes once and recomputes through the reference (straight-through
+# across the rounding, exactly the grad of the base op at the dequantized
+# point — what the parity tests pin).
+
+
+def _q8_quant(x, interpret, use_kernel):
+    """Per-row round-half-up int8; Pallas kernel or its bit-equal oracle."""
+    if not use_kernel:
+        return R.quantize_int8_ref(x, jnp.full(x.shape, 0.5, jnp.float32))
+    shp = x.shape
+    x2 = x.reshape(-1, shp[-1])
+    q, s = _quant_pallas(
+        x2, jnp.full(x2.shape, 0.5, jnp.float32), interpret=interpret
+    )
+    return q.reshape(shp), s.reshape(shp[:-1] + (1,))
+
+
+def _dtype_tag(x):
+    """Zero-size carrier smuggling a primal dtype through vjp residuals."""
+    return jnp.zeros((0,), x.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash_q8(q, k, v, causal, window, block, interpret, use_kernel):
+    out, _ = _flash_q8_fwd(q, k, v, causal, window, block, interpret, use_kernel)
+    return out
+
+
+def _flash_q8_fwd(q, k, v, causal, window, block, interpret, use_kernel):
+    kq, ks = _q8_quant(k, interpret, use_kernel)
+    vq, vs = _q8_quant(v, interpret, use_kernel)
+    if use_kernel:
+        out = _flash_int8_pallas(
+            q, kq, ks, vq, vs, causal=causal, window=window,
+            block_q=block, block_k=block, interpret=interpret,
+        )
+    else:
+        out = R.flash_attention_ref(
+            q, R.dequantize_int8_ref(kq, ks), R.dequantize_int8_ref(vq, vs),
+            causal=causal, window=window,
+        )
+    return out, (q, kq, ks, vq, vs, _dtype_tag(k), _dtype_tag(v))
+
+
+def _flash_q8_bwd(causal, window, block, interpret, use_kernel, res, g):
+    q, kq, ks, vq, vs, ktag, vtag = res
+    kd = R.dequantize_int8_ref(kq, ks)
+    vd = R.dequantize_int8_ref(vq, vs)
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: R.flash_attention_ref(
+            q_, k_, v_, causal=causal, window=window
+        ).astype(g.dtype),
+        q, kd, vd,
+    )
+    dq, dk, dv = vjp(g)
+    return dq.astype(q.dtype), dk.astype(ktag.dtype), dv.astype(vtag.dtype)
+
+
+_flash_q8.defvjp(_flash_q8_fwd, _flash_q8_bwd)
+
+
+def flash_attention_q8(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *,
+    causal: bool = False,
+    window: Optional[int] = None,
+    block: int = 128,
+    interpret: bool = False,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """Int8-fused training attention: K/V live in int8 end to end.
+
+    K/V are quantized per-row (scale = absmax/127, round-half-up), the
+    online-softmax sweep dequantizes each tile inside VMEM with f32
+    accumulation, and the backward residuals save the int8 K/V + scales
+    instead of the f32 tensors.  ``use_kernel=False`` runs the same math
+    off-Pallas (exact fallback)."""
+    return _flash_q8(q, k, v, causal, window, block, interpret, use_kernel)
 
 
 # ---------------------------------------------------------------------------
@@ -247,6 +341,48 @@ def rglru_scan(
     return _rglru(a, x, chunk, interpret)
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _rglru_q8(a, x, chunk, interpret, use_kernel):
+    y, _ = _rglru_q8_fwd(a, x, chunk, interpret, use_kernel)
+    return y
+
+
+def _rglru_q8_fwd(a, x, chunk, interpret, use_kernel):
+    xq, xs = _q8_quant(x, interpret, use_kernel)
+    if use_kernel:
+        y = _rglru_int8_pallas(
+            a, xq, xs, chunk=chunk, interpret=interpret, out_dtype=x.dtype
+        )
+    else:
+        y = R.rglru_scan_ref(a, R.dequantize_int8_ref(xq, xs)).astype(x.dtype)
+    # decay stays f32 (its seq padding must be exactly 1.0); only the gated
+    # input rides int8 — it is the larger, freshly-computed activation
+    return y, (a, xq, xs, _dtype_tag(x))
+
+
+def _rglru_q8_bwd(chunk, interpret, use_kernel, res, g):
+    a, xq, xs, xtag = res
+    xd = R.dequantize_int8_ref(xq, xs)
+    _, vjp = jax.vjp(
+        lambda a_, x_: R.rglru_scan_ref(a_, x_).astype(g.dtype), a, xd
+    )
+    da, dx = vjp(g)
+    return da.astype(a.dtype), dx.astype(xtag.dtype)
+
+
+_rglru_q8.defvjp(_rglru_q8_fwd, _rglru_q8_bwd)
+
+
+def rglru_scan_q8(
+    a: jax.Array, x: jax.Array, *,
+    chunk: int = 128, interpret: bool = False, use_kernel: bool = True,
+) -> jax.Array:
+    """Int8-fused RG-LRU: the gated input streams as int8 + per-row scales,
+    dequantized inside the scan (f32 carry), and the backward residual saves
+    the int8 input instead of the f32 one."""
+    return _rglru_q8(a, x, chunk, interpret, use_kernel)
+
+
 # ---------------------------------------------------------------------------
 # RWKV6 scan (differentiable)
 # ---------------------------------------------------------------------------
@@ -281,6 +417,62 @@ def rwkv6_scan(
     if not use_kernel:
         return R.rwkv6_scan_ref(r, k, v, w, u)
     return _rwkv6(r, k, v, w, u, chunk, interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def _rwkv6_q8(r, k, v, w, u, chunk, interpret, use_kernel):
+    out, _ = _rwkv6_q8_fwd(r, k, v, w, u, chunk, interpret, use_kernel)
+    return out
+
+
+def _rwkv6_q8_fwd(r, k, v, w, u, chunk, interpret, use_kernel):
+    rq, rs = _q8_quant(r, interpret, use_kernel)
+    kq, ks = _q8_quant(k, interpret, use_kernel)
+    vq, vs = _q8_quant(v, interpret, use_kernel)
+    if use_kernel:
+        out, s_fin = _rwkv6_int8_pallas(
+            rq, rs, kq, ks, vq, vs, w, u,
+            chunk=chunk, interpret=interpret, out_dtype=r.dtype,
+        )
+    else:
+        out, s_fin = R.rwkv6_scan_ref(
+            R.dequantize_int8_ref(rq, rs), R.dequantize_int8_ref(kq, ks),
+            R.dequantize_int8_ref(vq, vs), w.astype(jnp.float32), u,
+        )
+        out = out.astype(r.dtype)
+    res = (rq, rs, kq, ks, vq, vs, w, u,
+           _dtype_tag(r), _dtype_tag(k), _dtype_tag(v))
+    return (out, s_fin), res
+
+
+def _rwkv6_q8_bwd(chunk, interpret, use_kernel, res, g):
+    rq, rs, kq, ks, vq, vs, w, u, rtag, ktag, vtag = res
+    rd = R.dequantize_int8_ref(rq, rs)
+    kd = R.dequantize_int8_ref(kq, ks)
+    vd = R.dequantize_int8_ref(vq, vs)
+    g_out, g_s = g
+
+    def f(r_, k_, v_, w_, u_):
+        o, s = R.rwkv6_scan_ref(r_, k_, v_, w_, u_)
+        return o.astype(g_out.dtype), s
+
+    _, vjp = jax.vjp(f, rd, kd, vd, w, u)
+    dr, dk, dv, dw, du = vjp((g_out, g_s))
+    return (dr.astype(rtag.dtype), dk.astype(ktag.dtype),
+            dv.astype(vtag.dtype), dw, du)
+
+
+_rwkv6_q8.defvjp(_rwkv6_q8_fwd, _rwkv6_q8_bwd)
+
+
+def rwkv6_scan_q8(
+    r, k, v, w, u, *,
+    chunk: int = 32, interpret: bool = False, use_kernel: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Int8-fused WKV scan: r/k/v stream as int8 + per-row scales with
+    in-kernel dequant (decay/bonus stay f32 — the log-space overflow-safety
+    math), and the backward residuals save the int8 activations."""
+    return _rwkv6_q8(r, k, v, w, u, chunk, interpret, use_kernel)
 
 
 # ---------------------------------------------------------------------------

@@ -35,13 +35,20 @@ def _quant_kernel(x_ref, noise_ref, q_ref, scale_ref):
     scale_ref[...] = scale
 
 
-def quantize_int8(
+def _quantize_rows(
     x: jax.Array,               # (R, N) float
-    noise: jax.Array,           # (R, N) uniform [0,1)
+    noise: jax.Array,           # (R, N) rounding offsets in [0, 1)
     *,
     block_rows: int = 256,
     interpret: bool = False,
 ) -> Tuple[jax.Array, jax.Array]:
+    """The one row-quantization core: pad, tile, kernel, un-pad.
+
+    Every int8 producer in the repo funnels through here — the gradient-
+    transport flat path, the KV-cache path, and the quantized-training
+    residual path — so the rounding semantics (``floor(x/scale + noise)``,
+    i.e. round-half-up at ``noise=0.5``) are pinned in exactly one place.
+    """
     R, N = x.shape
     assert noise.shape == x.shape, (noise.shape, x.shape)
     # pad-and-mask for any R: the row block is sublane-aligned (multiple of
@@ -74,6 +81,16 @@ def quantize_int8(
     return q[:R], scale[:R]
 
 
+def quantize_int8(
+    x: jax.Array,               # (R, N) float
+    noise: jax.Array,           # (R, N) uniform [0,1)
+    *,
+    block_rows: int = 256,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    return _quantize_rows(x, noise, block_rows=block_rows, interpret=interpret)
+
+
 def dequantize_int8(q: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
     return (q.astype(jnp.float32) * scale).astype(dtype)
 
@@ -84,11 +101,11 @@ def dequantize_int8(q: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Ar
 #
 # The host transport ships grads as flat f32 vectors (one per layer bucket).
 # ``quantize_flat`` reshapes a vector into (ceil(n/chunk), chunk) rows so the
-# per-row kernel above gives one scale per ``chunk`` contiguous elements.
-# Rounding is the deterministic round-half-up (constant noise 0.5): every
-# worker quantizes its OWN contribution once and every peer decodes the same
-# int8 bytes, so determinism across replicas costs nothing; the quantization
-# bias is absorbed by the caller's error-feedback residual.
+# shared ``_quantize_rows`` core gives one scale per ``chunk`` contiguous
+# elements.  Rounding is the deterministic round-half-up (constant noise
+# 0.5): every worker quantizes its OWN contribution once and every peer
+# decodes the same int8 bytes, so determinism across replicas costs nothing;
+# the quantization bias is absorbed by the caller's error-feedback residual.
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
@@ -98,7 +115,7 @@ def _quantize_flat_jit(vec: jax.Array, chunk: int, interpret: bool):
     pad = rows * chunk - n
     mat = jnp.pad(vec.astype(jnp.float32), (0, pad)).reshape(rows, chunk)
     noise = jnp.full((rows, chunk), 0.5, jnp.float32)
-    return quantize_int8(mat, noise, interpret=interpret)
+    return _quantize_rows(mat, noise, interpret=interpret)
 
 
 def quantize_flat(

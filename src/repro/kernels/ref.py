@@ -271,3 +271,59 @@ def quantize_int8_ref(
 
 def dequantize_int8_ref(q: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
     return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Quantized-training (q8) ops: quantize → dequantize → base oracle
+# ---------------------------------------------------------------------------
+#
+# Each q8 op quantizes its streamed activations with the deterministic
+# round-half-up the Pallas quantize kernel uses (constant 0.5 noise — pinned
+# by the quantize parity tests), then runs the base math on the dequantized
+# values.  The fused kernels dequantize in-VMEM instead, so op and oracle see
+# the SAME int8 values and differ only by the usual kernel-vs-ref float
+# reassociation.
+
+
+def _q8_rows(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-row round-half-up int8 (the q8 training quantizer)."""
+    return quantize_int8_ref(x, jnp.full(x.shape, 0.5, jnp.float32))
+
+
+def _q8_roundtrip(x: jax.Array) -> jax.Array:
+    q, s = _q8_rows(x)
+    return dequantize_int8_ref(q, s, jnp.float32)
+
+
+def flash_attention_q8_ref(
+    q: jax.Array,               # (B, Sq, H, D)
+    k: jax.Array,               # (B, Skv, Hkv, D)
+    v: jax.Array,
+    *,
+    causal: bool = False,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """Flash attention with K/V squeezed through per-row int8."""
+    return flash_attention_ref(
+        q, _q8_roundtrip(k), _q8_roundtrip(v), causal=causal, window=window
+    )
+
+
+def rwkv6_scan_q8_ref(
+    r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,  # (B, S, H, D)
+    u: jax.Array,                                            # (H, D)
+) -> Tuple[jax.Array, jax.Array]:
+    """WKV scan with r/k/v squeezed through per-row int8 (decay stays f32)."""
+    out, s = rwkv6_scan_ref(
+        _q8_roundtrip(r), _q8_roundtrip(k), _q8_roundtrip(v),
+        w.astype(jnp.float32), u,
+    )
+    return out.astype(r.dtype), s
+
+
+def rglru_scan_q8_ref(
+    a: jax.Array,               # (B, S, W) decay in (0, 1)
+    x: jax.Array,               # (B, S, W) gated input
+) -> jax.Array:
+    """RG-LRU scan with the gated input squeezed through per-row int8."""
+    return rglru_scan_ref(a.astype(jnp.float32), _q8_roundtrip(x)).astype(x.dtype)

@@ -24,15 +24,14 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _rglru_kernel(a_ref, x_ref, y_ref, h_ref, *, chunk: int):
+def _rglru_body(a, x, y_ref, h_ref, *, chunk: int):
+    """Shared recurrence over already-loaded f32 (chunk, bw) tiles; the f32
+    and int8 (in-kernel dequant) kernels differ only in how x reaches f32."""
     ic = pl.program_id(2)
 
     @pl.when(ic == 0)
     def _init():
         h_ref[...] = jnp.zeros_like(h_ref)
-
-    a = a_ref[0].astype(jnp.float32)        # (chunk, bw)
-    x = x_ref[0].astype(jnp.float32)
 
     def step(t, carry):
         h = carry
@@ -42,6 +41,25 @@ def _rglru_kernel(a_ref, x_ref, y_ref, h_ref, *, chunk: int):
 
     h = jax.lax.fori_loop(0, chunk, step, h_ref[0])
     h_ref[0] = h
+
+
+def _rglru_kernel(a_ref, x_ref, y_ref, h_ref, *, chunk: int):
+    _rglru_body(
+        a_ref[0].astype(jnp.float32), x_ref[0].astype(jnp.float32),
+        y_ref, h_ref, chunk=chunk,
+    )
+
+
+def _rglru_int8_kernel(a_ref, x_ref, xs_ref, y_ref, h_ref, *, chunk: int):
+    # int8 gated-input tile + (chunk, 1) per-row scales; the decay stays f32
+    # because the seq padding must be exactly 1.0 (carry pass-through) and
+    # its values in (0, 1) drive the recurrence's stability.  The carry h is
+    # f32 VMEM scratch in both variants.
+    _rglru_body(
+        a_ref[0].astype(jnp.float32),
+        x_ref[0].astype(jnp.float32) * xs_ref[0],
+        y_ref, h_ref, chunk=chunk,
+    )
 
 
 def rglru_scan(
@@ -79,4 +97,52 @@ def rglru_scan(
         scratch_shapes=[pltpu.VMEM((1, bw), jnp.float32)],
         interpret=interpret,
     )(a, x)
+    return out[:, :S, :W]
+
+
+def rglru_scan_int8(
+    a: jax.Array,               # (B, S, W) decay in (0, 1), float
+    x: jax.Array,               # (B, S, W) int8 gated input
+    x_scale: jax.Array,         # (B, S, 1) f32 per-row scales
+    *,
+    block_w: int = 256,
+    chunk: int = 128,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """RG-LRU scan over an int8 gated input with in-kernel dequantization.
+
+    Same grid/blocking as :func:`rglru_scan`; the (1, L, 1) scale block
+    rides the x index map with the channel coordinate pinned to 0 (one
+    scale per timestep row serves every channel block)."""
+    B, S, W = a.shape
+    assert x.dtype == jnp.int8, x.dtype
+    bw = min(block_w, W)
+    L = min(chunk, S)
+    pad_s = (-S) % L
+    pad_w = (-W) % bw
+    if pad_s or pad_w:
+        a = jnp.pad(a, ((0, 0), (0, pad_s), (0, pad_w)))
+        if pad_s:
+            a = a.at[:, S:].set(1.0)
+        x = jnp.pad(x, ((0, 0), (0, pad_s), (0, pad_w)))
+        # zero scales on padded steps: x dequantizes to 0, a = 1 passes the
+        # carry through — padding cannot perturb real rows
+        x_scale = jnp.pad(x_scale, ((0, 0), (0, pad_s), (0, 0)))
+    Sp, Wp = a.shape[1], a.shape[2]
+    n_chunks, n_w = Sp // L, Wp // bw
+
+    out = pl.pallas_call(
+        functools.partial(_rglru_int8_kernel, chunk=L),
+        grid=(B, n_w, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, L, bw), lambda b, iw, ic: (b, ic, iw)),
+            pl.BlockSpec((1, L, bw), lambda b, iw, ic: (b, ic, iw)),
+            pl.BlockSpec((1, L, 1), lambda b, iw, ic: (b, ic, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, L, bw), lambda b, iw, ic: (b, ic, iw)),
+        out_shape=jax.ShapeDtypeStruct((B, Sp, Wp), out_dtype),
+        scratch_shapes=[pltpu.VMEM((1, bw), jnp.float32)],
+        interpret=interpret,
+    )(a, x, x_scale)
     return out[:, :S, :W]

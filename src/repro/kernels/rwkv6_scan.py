@@ -32,24 +32,23 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _wkv6_kernel(
-    r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, sfin_ref,
+def _wkv6_body(
+    r, k, v, lw, u, o_ref, sfin_ref,
     s_ref,                    # (D, D) f32 scratch — the carried state
     *,
     L: int,
     n_chunks: int,
 ):
+    """Shared chunked-WKV sweep over already-loaded f32 (L, D) tiles.
+
+    Both the f32 and the int8 (in-kernel dequant) kernels call this; the
+    only difference between them is how the r/k/v tiles reach f32."""
     ic = pl.program_id(2)
 
     @pl.when(ic == 0)
     def _init():
         s_ref[...] = jnp.zeros_like(s_ref)
 
-    r = r_ref[0, 0].astype(jnp.float32)       # (L, D)
-    k = k_ref[0, 0].astype(jnp.float32)
-    v = v_ref[0, 0].astype(jnp.float32)
-    lw = lw_ref[0, 0].astype(jnp.float32)     # (L, D) log-decay (<= 0)
-    u = u_ref[0].astype(jnp.float32)          # (D,)
     s0 = s_ref[...]                           # (D, D)
 
     cum = jnp.cumsum(lw, axis=0)              # (L, D), cum_t = sum_{j<=t}
@@ -86,6 +85,35 @@ def _wkv6_kernel(
     @pl.when(ic == n_chunks - 1)
     def _emit_state():
         sfin_ref[0, 0] = s_new
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, sfin_ref, s_ref, **kw):
+    _wkv6_body(
+        r_ref[0, 0].astype(jnp.float32),
+        k_ref[0, 0].astype(jnp.float32),
+        v_ref[0, 0].astype(jnp.float32),
+        lw_ref[0, 0].astype(jnp.float32),
+        u_ref[0].astype(jnp.float32),
+        o_ref, sfin_ref, s_ref, **kw,
+    )
+
+
+def _wkv6_int8_kernel(
+    r_ref, rs_ref, k_ref, ks_ref, v_ref, vs_ref, lw_ref, u_ref,
+    o_ref, sfin_ref, s_ref, **kw,
+):
+    # int8 r/k/v tiles + (L, 1) per-row scales on the same index map; the
+    # decay stays f32 (its log-cumsum is the numerically fragile part).
+    # The recurrent state is f32 VMEM scratch either way — only the streamed
+    # activations are narrow.
+    _wkv6_body(
+        r_ref[0, 0].astype(jnp.float32) * rs_ref[0, 0],
+        k_ref[0, 0].astype(jnp.float32) * ks_ref[0, 0],
+        v_ref[0, 0].astype(jnp.float32) * vs_ref[0, 0],
+        lw_ref[0, 0].astype(jnp.float32),
+        u_ref[0].astype(jnp.float32),
+        o_ref, sfin_ref, s_ref, **kw,
+    )
 
 
 def rwkv6_scan(
@@ -136,5 +164,66 @@ def rwkv6_scan(
         scratch_shapes=[pltpu.VMEM((D, D), jnp.float32)],
         interpret=interpret,
     )(rt, kt, vt, lwt, u)
+    out = jnp.moveaxis(out, 1, 2)[:, :S]
+    return out, s_fin
+
+
+def rwkv6_scan_int8(
+    r: jax.Array, r_scale: jax.Array,         # (B, S, H, D) int8 / (B, S, H, 1) f32
+    k: jax.Array, k_scale: jax.Array,
+    v: jax.Array, v_scale: jax.Array,
+    w: jax.Array,                             # (B, S, H, D) float decay
+    u: jax.Array,                             # (H, D)
+    *,
+    chunk: int = 32,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+) -> Tuple[jax.Array, jax.Array]:
+    """WKV scan over int8 r/k/v with in-kernel dequantization.
+
+    Identical grid/blocking to :func:`rwkv6_scan`; each (L, D) activation
+    tile arrives with its (L, 1) row scales on the same index map and is
+    dequantized as it enters the sweep.  Decay/bonus stay f32 — their
+    log-space math is the overflow-safety argument — and the (D, D) state
+    scratch is f32 as always."""
+    B, S, H, D = r.shape
+    assert r.dtype == jnp.int8 and k.dtype == jnp.int8 and v.dtype == jnp.int8
+    L = min(chunk, S)
+    pad = (-S) % L
+    lw = jnp.log(jnp.maximum(w.astype(jnp.float32), 1e-30))
+    rt, kt, vt = (jnp.moveaxis(t, 2, 1) for t in (r, k, v))
+    rst, kst, vst = (jnp.moveaxis(t, 2, 1) for t in (r_scale, k_scale, v_scale))
+    lwt = jnp.moveaxis(lw, 2, 1)
+    if pad:
+        cfg = ((0, 0), (0, 0), (0, pad), (0, 0))
+        rt, kt, vt = (jnp.pad(t, cfg) for t in (rt, kt, vt))
+        # zero scales: padded steps dequantize to 0 (and lw = 0 passes the
+        # state through), so padding cannot perturb the carried state
+        rst, kst, vst = (jnp.pad(t, cfg) for t in (rst, kst, vst))
+        lwt = jnp.pad(lwt, cfg)
+    Sp = rt.shape[2]
+    n_chunks = Sp // L
+
+    act_spec = pl.BlockSpec((1, 1, L, D), lambda b, h, ic: (b, h, ic, 0))
+    sc_spec = pl.BlockSpec((1, 1, L, 1), lambda b, h, ic: (b, h, ic, 0))
+    out, s_fin = pl.pallas_call(
+        functools.partial(_wkv6_int8_kernel, L=L, n_chunks=n_chunks),
+        grid=(B, H, n_chunks),
+        in_specs=[
+            act_spec, sc_spec, act_spec, sc_spec, act_spec, sc_spec,
+            act_spec,
+            pl.BlockSpec((1, D), lambda b, h, ic: (h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, L, D), lambda b, h, ic: (b, h, ic, 0)),
+            pl.BlockSpec((1, 1, D, D), lambda b, h, ic: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, Sp, D), out_dtype),
+            jax.ShapeDtypeStruct((B, H, D, D), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((D, D), jnp.float32)],
+        interpret=interpret,
+    )(rt, rst, kt, kst, vt, vst, lwt, u)
     out = jnp.moveaxis(out, 1, 2)[:, :S]
     return out, s_fin

@@ -61,6 +61,13 @@ class ModelConfig:
     # "native" keeps the decode KV cache in `dtype`; "int8" stores per-row
     # symmetric int8 + f32 scales and dequantizes inside the decode kernel
     kv_cache_dtype: str = "native"
+    # training hot-loop precision:
+    #   "f32"        — kernels stream activations at the model dtype
+    #   "bf16"       — attention/scan operands cast to bf16 before the kernel
+    #   "int8-fused" — K/V and scan activations quantized per-row to int8,
+    #                  dequantized inside the Pallas sweep (f32 accumulation),
+    #                  and saved-for-backward residuals kept as int8 + scales
+    train_precision: str = "f32"
     remat: bool = True
     scan_layers: bool = True
     fsdp: bool = False                # ZeRO-3-style extra sharding over "data"

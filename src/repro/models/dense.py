@@ -71,6 +71,7 @@ def _block_train(lp: Dict, x: jax.Array, cfg: ModelConfig, positions: jax.Array,
         rope_theta=cfg.rope_theta,
         mrope_sections=cfg.mrope_sections or None,
         mrope_positions=mrope_positions,
+        precision=cfg.train_precision,
     )
     x = x + h
     h = L.rms_norm(lp["ln2"], x)

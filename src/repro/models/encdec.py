@@ -81,6 +81,7 @@ def encode(params, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
         a = L.attention_train(
             lp["attn"], L.layer_norm(lp["ln1"], h),
             positions=positions, causal=False, use_rope=False,
+            precision=cfg.train_precision,
         )
         h = h + a
         return h + L.gelu_mlp(lp["mlp"], L.layer_norm(lp["ln2"], h))
@@ -117,6 +118,7 @@ def decode_train(params, cfg: ModelConfig, tokens: jax.Array,
         a = L.attention_train(
             lp["self_attn"], L.layer_norm(lp["ln1"], h),
             positions=positions, causal=True, use_rope=False,
+            precision=cfg.train_precision,
         )
         h = h + a
         ck, cv = L.cross_kv(lp["cross_attn"], enc_out)
@@ -149,17 +151,37 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype=None):
     dtype = dtype or cfg.dtype
     hd = cfg.resolved_head_dim()
     Ln = cfg.n_dec_layers
+    kv_shape = (Ln, batch, cache_len, cfg.n_kv_heads, hd)
+    x_shape = (Ln, batch, cfg.n_frames, cfg.n_kv_heads, hd)
+    if cfg.kv_cache_dtype == "int8":
+        # self-attn KV and the (large, static) cross-attn KV both store
+        # per-row symmetric int8 + f32 scale columns
+        return {
+            "k": jnp.zeros(kv_shape, jnp.int8),
+            "k_scale": jnp.zeros(kv_shape[:-1] + (1,), jnp.float32),
+            "v": jnp.zeros(kv_shape, jnp.int8),
+            "v_scale": jnp.zeros(kv_shape[:-1] + (1,), jnp.float32),
+            "xk": jnp.zeros(x_shape, jnp.int8),
+            "xk_scale": jnp.zeros(x_shape[:-1] + (1,), jnp.float32),
+            "xv": jnp.zeros(x_shape, jnp.int8),
+            "xv_scale": jnp.zeros(x_shape[:-1] + (1,), jnp.float32),
+        }
     return {
-        "k": jnp.zeros((Ln, batch, cache_len, cfg.n_kv_heads, hd), dtype),
-        "v": jnp.zeros((Ln, batch, cache_len, cfg.n_kv_heads, hd), dtype),
-        "xk": jnp.zeros((Ln, batch, cfg.n_frames, cfg.n_kv_heads, hd), dtype),
-        "xv": jnp.zeros((Ln, batch, cfg.n_frames, cfg.n_kv_heads, hd), dtype),
+        "k": jnp.zeros(kv_shape, dtype),
+        "v": jnp.zeros(kv_shape, dtype),
+        "xk": jnp.zeros(x_shape, dtype),
+        "xv": jnp.zeros(x_shape, dtype),
     }
 
 
 def cache_logical_axes(cfg: ModelConfig):
     kv = ("layers", "batch", "kv_seq", "act_kv_heads", None)
     x = ("layers", "batch", None, "act_kv_heads", None)
+    if cfg.kv_cache_dtype == "int8":
+        return {
+            "k": kv, "k_scale": kv, "v": kv, "v_scale": kv,
+            "xk": x, "xk_scale": x, "xv": x, "xv_scale": x,
+        }
     return {"k": kv, "v": kv, "xk": x, "xv": x}
 
 
@@ -180,14 +202,14 @@ def prefill(params, cfg: ModelConfig, tokens, cache_len: int, *,
     x = x + _dec_positions(params, tokens.shape[1]).astype(cfg.dtype)
     positions = jnp.arange(tokens.shape[1])
 
-    ks, vs, xks, xvs = [], [], [], []
+    kvs, crosses = [], []
     n = cfg.n_dec_layers
     for i in range(n):
         lp = jax.tree_util.tree_map(lambda a: a[i], params["dec_blocks"])
         a, kv = L.attention_prefill(
             lp["self_attn"], L.layer_norm(lp["ln1"], x),
             positions=positions, cache_len=cache_len, causal=True,
-            use_rope=False,
+            use_rope=False, kv_cache_dtype=cfg.kv_cache_dtype,
         )
         x = x + a
         ck, cv = L.cross_kv(lp["cross_attn"], enc_out)
@@ -195,15 +217,21 @@ def prefill(params, cfg: ModelConfig, tokens, cache_len: int, *,
             lp["cross_attn"], L.layer_norm(lp["ln_x"], x), ck, cv
         )
         x = x + L.gelu_mlp(lp["mlp"], L.layer_norm(lp["ln2"], x))
-        ks.append(kv["k"])
-        vs.append(kv["v"])
-        xks.append(ck)
-        xvs.append(cv)
+        kvs.append(kv)
+        if cfg.kv_cache_dtype == "int8":
+            from repro.kernels import ref as KR
+
+            xkq, xks = KR.quantize_int8_ref(ck)
+            xvq, xvs = KR.quantize_int8_ref(cv)
+            crosses.append({
+                "xk": xkq, "xk_scale": xks, "xv": xvq, "xv_scale": xvs,
+            })
+        else:
+            crosses.append({"xk": ck, "xv": cv})
     x = L.layer_norm(params["ln_dec"], x)
-    cache = {
-        "k": jnp.stack(ks), "v": jnp.stack(vs),
-        "xk": jnp.stack(xks), "xv": jnp.stack(xvs),
-    }
+    cache = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *[
+        {**kv, **cross} for kv, cross in zip(kvs, crosses)
+    ])
     return L.logits(params["embedding"], x[:, -1:]), cache
 
 
@@ -216,16 +244,25 @@ def decode_step(params, cfg: ModelConfig, token, cache, pos):
 
     def body(h, xs):
         lp, kv = xs
+        self_kv = {n: kv[n] for n in kv if not n.startswith("x")}
         a, new_kv = L.attention_decode(
             lp["self_attn"], L.layer_norm(lp["ln1"], h),
-            {"k": kv["k"], "v": kv["v"]}, pos=pos, use_rope=False,
+            self_kv, pos=pos, use_rope=False,
         )
         h = h + a
+        if "xk_scale" in kv:
+            from repro.kernels import ref as KR
+
+            ck = KR.dequantize_int8_ref(kv["xk"], kv["xk_scale"], cfg.dtype)
+            cv = KR.dequantize_int8_ref(kv["xv"], kv["xv_scale"], cfg.dtype)
+        else:
+            ck, cv = kv["xk"], kv["xv"]
         h = h + L.cross_attention(
-            lp["cross_attn"], L.layer_norm(lp["ln_x"], h), kv["xk"], kv["xv"]
+            lp["cross_attn"], L.layer_norm(lp["ln_x"], h), ck, cv
         )
         h = h + L.gelu_mlp(lp["mlp"], L.layer_norm(lp["ln2"], h))
-        return h, {"k": new_kv["k"], "v": new_kv["v"], "xk": kv["xk"], "xv": kv["xv"]}
+        cross = {n: kv[n] for n in kv if n.startswith("x")}
+        return h, {**new_kv, **cross}
 
     from repro.models.dense import _maybe_unrolled_scan
 

@@ -373,8 +373,16 @@ def attention_train(
     use_rope: bool = True,
     mrope_sections: Optional[Tuple[int, ...]] = None,
     mrope_positions: Optional[jax.Array] = None,
+    precision: str = "f32",
 ) -> jax.Array:
-    """Full-sequence attention (training / prefill without cache return)."""
+    """Full-sequence attention (training / prefill without cache return).
+
+    ``precision`` is ``ModelConfig.train_precision``: ``"bf16"`` casts the
+    attention operands before the kernel; ``"int8-fused"`` routes to the
+    quantized-K/V kernel whose backward saves int8 residuals.  The precision
+    semantics hold on AND off Pallas (the q8 op has an exact jnp fallback),
+    so a trajectory trained on CPU matches the TPU quantization decisions.
+    """
     q, k, v = qkv_project(p, x)
     if mrope_sections is not None:
         q = apply_mrope(q, mrope_positions, mrope_sections, rope_theta)
@@ -382,7 +390,16 @@ def attention_train(
     elif use_rope:
         q = apply_rope(q, positions, rope_theta)
         k = apply_rope(k, positions, rope_theta)
-    if FLAGS.use_pallas:
+    if precision == "bf16":
+        q, k, v = (t.astype(jnp.bfloat16) for t in (q, k, v))
+    if precision == "int8-fused":
+        from repro.kernels import ops as kops
+
+        o = kops.flash_attention_q8(
+            q, k, v, causal=causal, window=window,
+            interpret=FLAGS.pallas_interpret, use_kernel=FLAGS.use_pallas,
+        )
+    elif FLAGS.use_pallas:
         from repro.kernels import ops as kops
 
         o = kops.flash_attention(
@@ -391,7 +408,7 @@ def attention_train(
         )
     else:
         o = sdpa(q, k, v, causal=causal, window=window)
-    return out_project(p, o)
+    return out_project(p, o.astype(x.dtype))
 
 
 def attention_prefill(

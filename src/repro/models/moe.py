@@ -327,7 +327,7 @@ def _block_train(lp, x, cfg: ModelConfig, positions):
     h = L.rms_norm(lp["ln1"], x)
     h = L.attention_train(
         lp["attn"], h, positions=positions, causal=True, window=cfg.window,
-        rope_theta=cfg.rope_theta,
+        rope_theta=cfg.rope_theta, precision=cfg.train_precision,
     )
     x = x + h
     h = L.rms_norm(lp["ln2"], x)

@@ -57,7 +57,8 @@ def _rglru_gates(p: Dict, x: jax.Array):
     return log_a, gated
 
 
-def rglru_scan(p: Dict, x: jax.Array, h0: Optional[jax.Array] = None) -> jax.Array:
+def rglru_scan(p: Dict, x: jax.Array, h0: Optional[jax.Array] = None,
+               precision: str = "f32") -> jax.Array:
     """Associative-scan reference. x: (B, S, W) -> y: (B, S, W)."""
     log_a, gated = _rglru_gates(p, x)
     a = jnp.exp(log_a)
@@ -71,11 +72,24 @@ def rglru_scan(p: Dict, x: jax.Array, h0: Optional[jax.Array] = None) -> jax.Arr
 
     from repro.models.layers import FLAGS
 
-    if FLAGS.use_pallas:
+    if precision == "int8-fused":
+        from repro.kernels import ops as kops
+
+        # gated input streams as int8 + per-row scales; the decay a stays f32
+        # (seq padding inside the kernel must be exactly 1.0 to pass the carry)
+        y = kops.rglru_scan_q8(
+            a, gated, interpret=FLAGS.pallas_interpret,
+            use_kernel=FLAGS.use_pallas,
+        )
+    elif FLAGS.use_pallas:
+        if precision == "bf16":
+            gated = gated.astype(jnp.bfloat16).astype(jnp.float32)
         from repro.kernels import ops as kops
 
         y = kops.rglru_scan(a, gated, interpret=FLAGS.pallas_interpret)
     else:
+        if precision == "bf16":
+            gated = gated.astype(jnp.bfloat16).astype(jnp.float32)
         _, y = jax.lax.associative_scan(combine, (a, gated), axis=1)
     return y.astype(x.dtype)
 
@@ -139,7 +153,7 @@ def recurrent_block(
     rec_in = L.linear(lp["in_rec"], x)
     gate = jax.nn.gelu(L.linear(lp["in_gate"], x))
     rec = causal_conv1d(lp["conv"], rec_in)
-    rec = rglru_scan(lp["lru"], rec)
+    rec = rglru_scan(lp["lru"], rec, precision=cfg.train_precision)
     y = rec * gate
     y = wlc(y, "batch", "seq", "act_mlp")
     out = L.linear(lp["out"], y)
@@ -215,6 +229,7 @@ def _layer_train(lp: Dict, x: jax.Array, cfg: ModelConfig, kind: str,
         h = L.attention_train(
             lp["attn"], h, positions=positions, causal=True,
             window=cfg.window, rope_theta=cfg.rope_theta,
+            precision=cfg.train_precision,
         )
     else:
         h = recurrent_block(lp, h, cfg)
@@ -277,7 +292,7 @@ def prefill(params, cfg: ModelConfig, tokens, cache_len: int, **_):
     kinds = layer_kinds(cfg)
     attn_len = min(cache_len, cfg.window or cache_len)
 
-    A_k, A_v, R_conv, R_lru = [], [], [], []
+    A_kv, R_conv, R_lru = [], [], []
     idx = {"R": 0, "A": 0}
     for kind in kinds:
         lp = jax.tree_util.tree_map(lambda a: a[idx[kind]], params["groups"][kind])
@@ -286,10 +301,9 @@ def prefill(params, cfg: ModelConfig, tokens, cache_len: int, **_):
             h, kv = L.attention_prefill(
                 lp["attn"], h, positions=positions, cache_len=attn_len,
                 causal=True, window=cfg.window, rope_theta=cfg.rope_theta,
-                rotating=True,
+                rotating=True, kv_cache_dtype=cfg.kv_cache_dtype,
             )
-            A_k.append(kv["k"])
-            A_v.append(kv["v"])
+            A_kv.append(kv)
         else:
             h, st = recurrent_block(lp, h, cfg, return_state=True)
             R_conv.append(st["conv"])
@@ -299,9 +313,15 @@ def prefill(params, cfg: ModelConfig, tokens, cache_len: int, **_):
         x = x + L.geglu(lp["mlp"], h)
         idx[kind] += 1
 
+    empty_a = (
+        {"k": jnp.zeros((0,)), "k_scale": jnp.zeros((0,)),
+         "v": jnp.zeros((0,)), "v_scale": jnp.zeros((0,))}
+        if cfg.kv_cache_dtype == "int8"
+        else {"k": jnp.zeros((0,)), "v": jnp.zeros((0,))}
+    )
     cache = {
-        "A": {"k": jnp.stack(A_k), "v": jnp.stack(A_v)} if A_k else {
-            "k": jnp.zeros((0,)), "v": jnp.zeros((0,))},
+        "A": jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *A_kv)
+        if A_kv else empty_a,
         "R": {"conv": jnp.stack(R_conv), "lru": jnp.stack(R_lru)} if R_conv else {
             "conv": jnp.zeros((0,)), "lru": jnp.zeros((0,))},
     }
@@ -323,11 +343,21 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype=None):
     hd = cfg.resolved_head_dim()
     w = cfg.lru_width or cfg.d_model
     attn_len = min(cache_len, cfg.window or cache_len)
+    kv_shape = (n_a, batch, attn_len, cfg.n_kv_heads, hd)
+    if cfg.kv_cache_dtype == "int8":
+        a_cache = {
+            "k": jnp.zeros(kv_shape, jnp.int8),
+            "k_scale": jnp.zeros(kv_shape[:-1] + (1,), jnp.float32),
+            "v": jnp.zeros(kv_shape, jnp.int8),
+            "v_scale": jnp.zeros(kv_shape[:-1] + (1,), jnp.float32),
+        }
+    else:
+        a_cache = {
+            "k": jnp.zeros(kv_shape, dtype),
+            "v": jnp.zeros(kv_shape, dtype),
+        }
     return {
-        "A": {
-            "k": jnp.zeros((n_a, batch, attn_len, cfg.n_kv_heads, hd), dtype),
-            "v": jnp.zeros((n_a, batch, attn_len, cfg.n_kv_heads, hd), dtype),
-        },
+        "A": a_cache,
         "R": {
             "conv": jnp.zeros((n_r, batch, cfg.conv_width - 1, w), dtype),
             "lru": jnp.zeros((n_r, batch, w), jnp.float32),
@@ -336,11 +366,13 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype=None):
 
 
 def cache_logical_axes(cfg: ModelConfig):
+    kv = ("layers", "batch", "kv_seq", "act_kv_heads", None)
+    a_axes = (
+        {"k": kv, "k_scale": kv, "v": kv, "v_scale": kv}
+        if cfg.kv_cache_dtype == "int8" else {"k": kv, "v": kv}
+    )
     return {
-        "A": {
-            "k": ("layers", "batch", "kv_seq", "act_kv_heads", None),
-            "v": ("layers", "batch", "kv_seq", "act_kv_heads", None),
-        },
+        "A": a_axes,
         "R": {
             "conv": ("layers", "batch", None, "lru"),
             "lru": ("layers", "batch", "lru"),
@@ -359,7 +391,7 @@ def decode_step(params, cfg: ModelConfig, token, cache, pos):
     kinds = layer_kinds(cfg)
     window = cfg.window or cache.get("A", {}).get("k", jnp.zeros((1, 1, 1))).shape[2]
 
-    new_A_k, new_A_v, new_conv, new_lru = [], [], [], []
+    new_A, new_conv, new_lru = [], [], []
     idx = {"R": 0, "A": 0}
     for i, kind in enumerate(kinds):
         lp = jax.tree_util.tree_map(
@@ -367,10 +399,9 @@ def decode_step(params, cfg: ModelConfig, token, cache, pos):
         )
         h = L.rms_norm(lp["ln1"], x)
         if kind == "A":
-            kv = {
-                "k": cache["A"]["k"][idx["A"]],
-                "v": cache["A"]["v"][idx["A"]],
-            }
+            # every KV leaf (2-leaf native or 4-leaf int8 + scales) rides
+            # the same rotating-window roll: scale columns are (B, S, H, 1)
+            kv = {n: c[idx["A"]] for n, c in cache["A"].items()}
             cache_rows = kv["k"].shape[1]
             win = min(window, cache_rows)
             # rotating-window slot; if full, roll left then write the last row
@@ -385,8 +416,7 @@ def decode_step(params, cfg: ModelConfig, token, cache, pos):
                 pos=pos, rope_theta=cfg.rope_theta,
                 slot=slot, valid_len=jnp.minimum(pos + 1, win),
             )
-            new_A_k.append(kv["k"])
-            new_A_v.append(kv["v"])
+            new_A.append(kv)
             h = attn_out
         else:
             st = {
@@ -402,8 +432,8 @@ def decode_step(params, cfg: ModelConfig, token, cache, pos):
         idx[kind] += 1
 
     new_cache = {
-        "A": {"k": jnp.stack(new_A_k), "v": jnp.stack(new_A_v)}
-        if new_A_k else cache["A"],
+        "A": jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *new_A)
+        if new_A else cache["A"],
         "R": {"conv": jnp.stack(new_conv), "lru": jnp.stack(new_lru)}
         if new_conv else cache["R"],
     }

@@ -159,7 +159,19 @@ def time_mix(
     from repro.models.layers import FLAGS
 
     if state is None:
-        if FLAGS.use_pallas:
+        precision = cfg.train_precision
+        if precision == "bf16":
+            r4, k4, v4 = (t.astype(jnp.bfloat16) for t in (r4, k4, v4))
+        if precision == "int8-fused":
+            from repro.kernels import ops as kops
+
+            # r/k/v stream through the kernel as int8 + per-row scales; the
+            # decay w stays f32 (its log-cumsum is the overflow-safety math)
+            out, _s = kops.rwkv6_scan_q8(
+                r4, k4, v4, w4, u,
+                interpret=FLAGS.pallas_interpret, use_kernel=FLAGS.use_pallas,
+            )
+        elif FLAGS.use_pallas:
             from repro.kernels import ops as kops
 
             out, _s = kops.rwkv6_scan(

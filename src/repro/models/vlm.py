@@ -82,7 +82,8 @@ def decode_step(params, cfg: ModelConfig, token, cache, pos):
     # so text decode is EXACT standard RoPE at the M-RoPE text position
     # pos + offset (offset = grid_start - n_vis, carried in the cache).
     offset = cache["mrope_offset"]
-    kv = {"k": cache["k"], "v": cache["v"]}
+    # pass every KV leaf through (2-leaf native or 4-leaf int8 + scales)
+    kv = {k: v for k, v in cache.items() if k != "mrope_offset"}
     logits, kv = dense.decode_step(params, cfg, token, kv, pos,
                                    rope_offset=offset)
     kv["mrope_offset"] = offset

@@ -21,6 +21,11 @@ Two layouts behind one interface (``admit`` / ``snapshot`` / ``publish`` /
 
 Reused blocks are the very arrays computed the first time, so a prefix-cache
 hit is bit-identical to a cold prefill (tested).
+
+Both adapters are leaf-generic over the model's cache pytree, so the int8
+KV layouts (4-leaf ``{k, k_scale, v, v_scale}``, with scale columns as
+ordinary ``(..., 1)`` f32 leaves) page, snapshot, and publish exactly like
+native caches — no per-dtype paths here.
 """
 from __future__ import annotations
 

@@ -308,6 +308,32 @@ def make_bucketed_apply_step(
     return apply_step
 
 
+def residual_bytes(
+    model: Model, batch_abs: Dict[str, Any], *, aux_weight: float = 0.01
+) -> int:
+    """Bytes of saved-for-backward residuals of one loss VJP (no allocation).
+
+    ``jax.vjp``'s pullback is a Partial pytree whose leaves ARE the residual
+    arrays, so ``eval_shape`` of it prices the backward pass's live memory —
+    the footprint ``train_precision="int8-fused"`` shrinks by saving K/V and
+    scan activations as int8 + per-row scales instead of full-width floats.
+    """
+    params_abs, _ = model.init_params(abstract=True)
+
+    def f(params, batch):
+        _, pullback = jax.vjp(
+            lambda p: loss_fn(model, p, batch, aux_weight=aux_weight)[0],
+            params,
+        )
+        return pullback
+
+    pb = jax.eval_shape(f, params_abs, batch_abs)
+    return int(sum(
+        jnp.dtype(l.dtype).itemsize * (int(math.prod(l.shape)) if l.shape else 1)
+        for l in jax.tree_util.tree_leaves(pb)
+    ))
+
+
 def make_eval_step(model: Model, *, aux_weight: float = 0.01) -> Callable:
     def eval_step(params, batch):
         _, parts = loss_fn(model, params, batch, aux_weight=aux_weight)

@@ -488,3 +488,183 @@ def test_quantize_stochastic_rounding_unbiased_property(val, seed):
     # draws concentrates within ~s/sqrt(n) (4 sigma margin)
     step = float(s.max())
     np.testing.assert_allclose(mean, rows, atol=4 * step / np.sqrt(n) + 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# q8 ops (int8-fused training: in-kernel dequant + int8 residuals)
+# ---------------------------------------------------------------------------
+
+
+def _q8_roundtrip(x):
+    """Deterministic round-half-up quantize->dequantize, as the q8 ops do."""
+    q, s = R.quantize_int8_ref(x, jnp.full(x.shape, 0.5, jnp.float32))
+    return R.dequantize_int8_ref(q, s)
+
+
+FLASH_Q8_CASES = [
+    # B, S, H, Hkv, D, causal, window
+    (2, 128, 4, 2, 64, True, None),
+    (1, 100, 2, 2, 32, True, 32),
+    (2, 64, 4, 4, 64, False, None),
+]
+
+
+@pytest.mark.parametrize("case", FLASH_Q8_CASES, ids=[str(c) for c in FLASH_Q8_CASES])
+def test_flash_attention_q8_matches_oracle(case):
+    B, S, H, Hkv, D, causal, window = case
+    ks = jax.random.split(jax.random.fold_in(KEY, 31), 3)
+    q = _rand(ks[0], (B, S, H, D), jnp.float32)
+    k = _rand(ks[1], (B, S, Hkv, D), jnp.float32)
+    v = _rand(ks[2], (B, S, Hkv, D), jnp.float32)
+    out = ops.flash_attention_q8(
+        q, k, v, causal=causal, window=window, block=64, interpret=True
+    )
+    ref = R.flash_attention_q8_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+    # the off-Pallas fallback IS the oracle, bit for bit
+    fb = ops.flash_attention_q8(
+        q, k, v, causal=causal, window=window, use_kernel=False
+    )
+    assert bool(jnp.all(fb == ref))
+
+
+def test_flash_attention_q8_close_to_f32():
+    """Documented tolerance of the int8-KV attention vs full precision."""
+    ks = jax.random.split(jax.random.fold_in(KEY, 32), 3)
+    q = _rand(ks[0], (2, 128, 4, 64), jnp.float32)
+    k = _rand(ks[1], (2, 128, 4, 64), jnp.float32)
+    v = _rand(ks[2], (2, 128, 4, 64), jnp.float32)
+    out = ops.flash_attention_q8(q, k, v, causal=True, interpret=True)
+    f32 = R.flash_attention_ref(q, k, v, causal=True)
+    assert float(jnp.max(jnp.abs(out - f32))) < 5e-2
+
+
+def test_flash_attention_q8_grad_matches_oracle():
+    """Straight-through estimator: grads equal the base oracle's grads
+    evaluated AT the dequantized K/V point (quantize has degenerate grads,
+    so grad-of-q8-oracle is NOT the comparison)."""
+    ks = jax.random.split(jax.random.fold_in(KEY, 33), 3)
+    q = _rand(ks[0], (1, 64, 2, 32), jnp.float32)
+    k = _rand(ks[1], (1, 64, 2, 32), jnp.float32)
+    v = _rand(ks[2], (1, 64, 2, 32), jnp.float32)
+    got = jax.grad(lambda t: ops.flash_attention_q8(
+        *t, causal=True, interpret=True).sum())((q, k, v))
+    kd, vd = _q8_roundtrip(k), _q8_roundtrip(v)
+    want = jax.grad(lambda t: R.flash_attention_ref(
+        *t, causal=True).sum())((q, kd, vd))
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, atol=2e-5, rtol=2e-5)
+
+
+RWKV_Q8_CASES = [
+    (2, 64, 2, 32, 16),
+    (1, 100, 4, 64, 32),
+]
+
+
+@pytest.mark.parametrize("case", RWKV_Q8_CASES, ids=[str(c) for c in RWKV_Q8_CASES])
+def test_rwkv6_scan_q8_matches_oracle(case):
+    B, S, H, D, chunk = case
+    ks = jax.random.split(jax.random.fold_in(KEY, 34), 5)
+    r = _rand(ks[0], (B, S, H, D), jnp.float32) * 0.5
+    k = _rand(ks[1], (B, S, H, D), jnp.float32) * 0.5
+    v = _rand(ks[2], (B, S, H, D), jnp.float32) * 0.5
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (B, S, H, D))))
+    u = _rand(ks[4], (H, D), jnp.float32) * 0.5
+    out, s_fin = ops.rwkv6_scan_q8(r, k, v, w, u, chunk=chunk, interpret=True)
+    ref, s_ref = R.rwkv6_scan_q8_ref(r, k, v, w, u)
+    np.testing.assert_allclose(out, ref, atol=5e-5, rtol=5e-5)
+    np.testing.assert_allclose(s_fin, s_ref, atol=5e-5, rtol=5e-5)
+    fb_out, fb_s = ops.rwkv6_scan_q8(r, k, v, w, u, use_kernel=False)
+    assert bool(jnp.all(fb_out == ref)) and bool(jnp.all(fb_s == s_ref))
+
+
+def test_rwkv6_scan_q8_grad_matches_oracle():
+    B, S, H, D = 1, 48, 2, 16
+    ks = jax.random.split(jax.random.fold_in(KEY, 35), 5)
+    r = _rand(ks[0], (B, S, H, D), jnp.float32) * 0.5
+    k = _rand(ks[1], (B, S, H, D), jnp.float32) * 0.5
+    v = _rand(ks[2], (B, S, H, D), jnp.float32) * 0.5
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (B, S, H, D))))
+    u = _rand(ks[4], (H, D), jnp.float32) * 0.5
+
+    def loss(fn, t):
+        out, s = fn(t)
+        return jnp.sum(out ** 2) + jnp.sum(s ** 2)
+
+    got = jax.grad(lambda t: loss(
+        lambda a: ops.rwkv6_scan_q8(*a, w, u, chunk=16, interpret=True), t
+    ))((r, k, v))
+    rd, kd, vd = _q8_roundtrip(r), _q8_roundtrip(k), _q8_roundtrip(v)
+    want = jax.grad(lambda t: loss(
+        lambda a: R.rwkv6_scan_ref(*a, w, u), t
+    ))((rd, kd, vd))
+    for g, x in zip(got, want):
+        np.testing.assert_allclose(g, x, atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("case", [(2, 64, 128), (1, 100, 300)],
+                         ids=["(2,64,128)", "(1,100,300)"])
+def test_rglru_scan_q8_matches_oracle(case):
+    B, S, W = case
+    ks = jax.random.split(jax.random.fold_in(KEY, 36), 2)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (B, S, W))) * 0.99
+    x = _rand(ks[1], (B, S, W), jnp.float32)
+    out = ops.rglru_scan_q8(a, x, chunk=32, interpret=True)
+    ref = R.rglru_scan_q8_ref(a, x)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+    fb = ops.rglru_scan_q8(a, x, use_kernel=False)
+    assert bool(jnp.all(fb == ref))
+
+
+def test_rglru_scan_q8_grad_matches_oracle():
+    B, S, W = 1, 64, 96
+    ks = jax.random.split(jax.random.fold_in(KEY, 37), 2)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (B, S, W))) * 0.99
+    x = _rand(ks[1], (B, S, W), jnp.float32)
+    got = jax.grad(lambda t: ops.rglru_scan_q8(
+        t[0], t[1], chunk=16, interpret=True).sum())((a, x))
+    xd = _q8_roundtrip(x)
+    want = jax.grad(lambda t: R.rglru_scan_ref(t[0], t[1]).sum())((a, xd))
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused MoE combine (one-hot-matmul scatter-add)
+# ---------------------------------------------------------------------------
+
+
+def _combine_case(seed, T=64, d=32, E=8, k=2, C=8):
+    from repro.kernels import fused_moe as FM
+
+    ks = jax.random.split(jax.random.fold_in(KEY, seed), 3)
+    x = jax.random.normal(ks[0], (T, d), jnp.float32)
+    router = jax.random.normal(ks[1], (d, E)) * 0.5
+    slot_tok, _gate, st, slot, keep, _aux = FM.moe_routing(x, router, k, C)
+    y = jax.random.normal(ks[2], (E * C, d), jnp.float32)
+    got = FM.fused_moe_combine(y, slot_tok, T, interpret=True)
+    want = FM._combine_xla(y, st, slot, keep, T, E, C)
+    assert bool(jnp.all(got == want)), f"combine not bit-exact (seed {seed})"
+
+
+def test_fused_moe_combine_bitexact_vs_xla():
+    """The one-hot-matmul combine is BIT-exact vs the XLA scatter-add:
+    each token row receives <= k nonzero addends, and adding exact zeros is
+    the identity in f32.  Includes heavy capacity overflow (dropped copies)."""
+    _combine_case(41, C=32)          # no drops
+    _combine_case(42, C=8)           # moderate overflow
+    _combine_case(43, k=4, C=4)      # heavy overflow: most copies dropped
+    _combine_case(44, T=100, d=48, E=4, k=1, C=16)  # ragged T vs block_t
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2 ** 31 - 1),
+    k=st.integers(min_value=1, max_value=4),
+    C=st.integers(min_value=1, max_value=48),
+)
+def test_fused_moe_combine_bitexact_property(seed, k, C):
+    """Property form of the bit-exactness claim over random routings,
+    top-k widths, and capacities (incl. overflow-drop regimes)."""
+    _combine_case(seed % 1000 + 100, k=k, C=C)

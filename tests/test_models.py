@@ -109,6 +109,63 @@ def test_full_config_dims(arch):
     assert hd * cfg.n_heads >= cfg.d_model // 2  # sane head geometry
 
 
+@pytest.mark.parametrize("arch", ["whisper-medium", "qwen2-vl-7b",
+                                  "recurrentgemma-2b"])
+def test_int8_kv_cache_greedy_token_parity(arch):
+    """kv_cache_dtype='int8' greedy decode tracks the native-dtype cache for
+    the non-engine families (encdec / vlm / rglru); dense and moe are covered
+    end-to-end by the ServeEngine int8 test.
+
+    Both models consume the NATIVE model's greedy stream (teacher forcing), so
+    one near-tie flip cannot compound.  Random-init logits have O(0.1) argmax
+    margins while int8 KV adds O(1) logit noise, so token parity is asserted
+    at every step whose native margin clears the measured noise — a layout or
+    scale-plumbing bug produces O(logit-scale) errors and fails the closeness
+    bound immediately."""
+    cfg = smoke_config(arch)
+    m = get_model(cfg)
+    m8 = get_model(cfg.with_(kv_cache_dtype="int8"))
+    params, _ = m.init_params(key=KEY)
+    B, P, N = 2, 12, 6
+    tokens, kwargs = _inputs(cfg, B, P, KEY)
+    start_pos = P
+    if cfg.family == "vlm":
+        start_pos = kwargs["patch_embeds"].shape[1] + tokens.shape[1]
+    cache_len = min(start_pos + N, cfg.window or start_pos + N)
+
+    lp, cache = m.prefill(params, tokens, cache_len=cache_len, **kwargs)
+    lp8, cache8 = m8.prefill(params, tokens, cache_len=cache_len, **kwargs)
+    # prefill attention runs full-precision; only the cache is quantized
+    np.testing.assert_allclose(np.asarray(lp8), np.asarray(lp), atol=1e-5)
+    tok = jnp.argmax(lp[:, -1], axis=-1).astype(jnp.int32)[:, None]
+
+    parity_checked = 0
+    for t in range(N - 1):
+        pos = jnp.full((B,), start_pos + t, jnp.int32)
+        ld, cache = m.decode_step(params, tok, cache, pos)
+        ld8, cache8 = m8.decode_step(params, tok, cache8, pos)
+        scale = float(jnp.max(jnp.abs(ld)))
+        top2 = jnp.sort(ld[:, -1], axis=-1)[:, -2:]
+        margins = np.asarray(top2[:, 1] - top2[:, 0])
+        want = np.asarray(jnp.argmax(ld[:, -1], axis=-1))
+        got = np.asarray(jnp.argmax(ld8[:, -1], axis=-1))
+        for b in range(B):
+            rdiff = float(jnp.max(jnp.abs(ld8[b] - ld[b])))
+            assert rdiff < 0.4 * scale, f"step {t} row {b}: {rdiff} vs {scale}"
+            if margins[b] > 2.0 * rdiff:
+                assert got[b] == want[b]
+                parity_checked += 1
+        tok = jnp.asarray(want, jnp.int32)[:, None]   # teacher-force native
+    assert parity_checked >= N                         # the gate has teeth
+
+    # the quantized KV really is smaller (int8 + 1/D-sized f32 scales);
+    # rglru's R-state (conv window + lru h) is not a KV cache and stays f32
+    if cfg.family == "rglru":
+        cache8, cache = cache8["A"], cache["A"]
+    nbytes = lambda c: sum(l.nbytes for l in jax.tree_util.tree_leaves(c))
+    assert nbytes(cache8) < 0.5 * nbytes(cache)
+
+
 def test_rotating_window_decode_exact():
     """Sliding-window decode (rglru A-layers) matches full forward EVEN after
     the window wraps — guards the absolute-RoPE-phase fix."""
